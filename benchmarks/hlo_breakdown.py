@@ -1,0 +1,101 @@
+"""Per-op-kind / per-computation byte & flop breakdown of a dumped HLO —
+the §Perf profiling tool (dry-run profiles are lowered IR, not traces).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch X --shape Y \
+      --dump-hlo /tmp/x.hlo
+  PYTHONPATH=src python benchmarks/hlo_breakdown.py /tmp/x.hlo
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from collections import defaultdict
+
+from repro.launch import hlo_analysis as HA
+
+
+def breakdown(path: str, top: int = 15):
+    text = open(path).read()
+    registry = json.load(open(path + ".registry"))
+    comps = HA.parse_computations(text)
+    symtabs = {n: {o.name: o.shape for o in ops} for n, ops in comps.items()}
+
+    bykind = defaultdict(float)
+    byop = defaultdict(float)
+    flops_byname = defaultdict(float)
+    unknown: list = []
+
+    # reuse analyze()'s exact logic by monkey-walking with instrumentation
+    orig = HA.analyze(text, registry)
+
+    NO = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+          "after-all", "partition-id", "replica-id", "while",
+          "conditional", "call"}
+
+    def operand_names(op):
+        head = op.rest.split("metadata=")[0]
+        head = re.split(r"\b(?:calls|to_apply|body|condition|dimensions"
+                        r"|sharding|channel_id)=", head)[0]
+        return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", head)]
+
+    def callees(op):
+        out = []
+        if op.kind == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            trip = HA._trip_count(op.op_name, registry, unknown)
+            if mb:
+                out.append((mb.group(1), float(trip)))
+            if mc:
+                out.append((mc.group(1), float(trip)))
+        elif op.kind in ("fusion", "call"):
+            for a in ("calls", "to_apply"):
+                m = re.search(a + r"=%?([\w\.\-]+)", op.rest)
+                if m:
+                    out.append((m.group(1), 1.0))
+        return out
+
+    def walk(cn, mult, cb, depth=0):
+        ops = comps.get(cn)
+        if ops is None or depth > 64:
+            return
+        st = symtabs[cn]
+        for op in ops:
+            if op.kind == "dot":
+                f = HA._dot_flops(op, st)
+                flops_byname[(cn[:40], op.op_name[-70:])] += mult * f
+            if cb and op.kind not in NO:
+                b = mult * (HA.shape_bytes(op.shape))
+                bykind[op.kind] += b
+                byop[(cn[:40], op.kind, op.shape[:44])] += b
+            for c, extra in callees(op):
+                walk(c, mult * extra,
+                     cb and op.kind in ("while", "call", "conditional"),
+                     depth + 1)
+
+    entry = next(n for n, ops in comps.items()
+                 if n != "__ENTRY__" and ops is comps["__ENTRY__"])
+    walk(entry, 1.0, True)
+
+    print(f"== analyze(): {orig['dot_flops']/1e12:.2f} TF, "
+          f"{orig['bytes_accessed']/1e9:.1f} GB, "
+          f"wire {orig['total_wire_bytes']/1e9:.2f} GB ==")
+    print("\n-- output bytes by op kind (x mult) --")
+    for k, v in sorted(bykind.items(), key=lambda t: -t[1])[:top]:
+        print(f"  {k:28s} {v/1e9:10.2f} GB")
+    print("\n-- top individual (computation, kind, shape) --")
+    for (c, k, s), v in sorted(byop.items(), key=lambda t: -t[1])[:top]:
+        print(f"  {v/1e9:8.2f} GB  {k:22s} {s:46s} {c}")
+    print("\n-- top dot sites (flops) --")
+    for (c, on), v in sorted(flops_byname.items(),
+                             key=lambda t: -t[1])[:top]:
+        print(f"  {v/1e12:8.2f} TF  {c:42s} ...{on}")
+    if orig["unknown_whiles"]:
+        print("\nUNKNOWN WHILES:", orig["unknown_whiles"])
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 15)

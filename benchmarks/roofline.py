@@ -1,0 +1,83 @@
+"""Roofline aggregation: results/dryrun/*.json -> the §Roofline table.
+
+Prints a markdown table per mesh with the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line "what would move the
+dominant term" note derived from the cell's structure.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.1f}ms"
+    return f"{v * 1e6:.0f}us"
+
+
+def _advice(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    kind = r["kind"]
+    if dom == "memory_s":
+        if kind == "decode":
+            return "quantize/shard KV cache further; fuse cache update"
+        return "raise arithmetic intensity: less remat, fuse attn (Pallas)"
+    if dom == "collective_s":
+        if r["collectives"]["wire_bytes"].get("all-reduce", 0) > \
+                r["collectives"]["total_wire_bytes"] * 0.6:
+            return "reduce-scatter grads + int8 compress inter-pod"
+        return "overlap a2a/AG with compute; resharding of activations"
+    return "MXU-align tiles; cut redundant recompute (remat policy)"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_cells():
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rl['compute_s'])} | "
+            f"{_fmt_s(rl['memory_s'])} | {_fmt_s(rl['collective_s'])} | "
+            f"{rl['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | {_advice(r)} |")
+    return "\n".join(rows)
+
+
+def run():
+    """benchmarks.run hook: emit one CSV row per dry-run cell."""
+    out = []
+    for r in load_cells():
+        rl = r["roofline"]
+        dom_s = rl[rl["dominant"]]
+        out.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            dom_s * 1e6,
+            f"dom={rl['dominant']};useful={r['useful_flops_ratio']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(table(mesh))

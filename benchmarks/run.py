@@ -1,0 +1,47 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+# Mapping to the paper:
+#   bench_linregr     — Figures 4/5 (linregr UDA scaling: k-sweep,
+#                        implied segment speedup, v0.1 vs v0.3 history)
+#   bench_iterative   — §4.2 IRLS cost + driver overhead; §4.3 k-means
+#                        two-pass vs fused single pass
+#   bench_sgd_models  — Table 2 (six models, one SGD abstraction)
+#   bench_text        — Table 3 (feature extraction, Viterbi, MCMC,
+#                        q-gram matching)
+#   roofline          — §Roofline rows from the dry-run artifacts (only
+#                        emitted when results/dryrun exists)
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import bench_linregr, bench_iterative, bench_sgd_models, \
+        bench_text, roofline
+
+    suites = [
+        ("bench_linregr", bench_linregr.run),
+        ("bench_iterative", bench_iterative.run),
+        ("bench_sgd_models", bench_sgd_models.run),
+        ("bench_text", bench_text.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite_name, fn in suites:
+        try:
+            for name, us, extra in fn():
+                print(f"{name},{us:.1f},{extra}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{suite_name},NaN,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

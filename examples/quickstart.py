@@ -1,0 +1,74 @@
+"""Quickstart: the MADlib analytics session from the paper, in MADJAX.
+
+Mirrors §4's worked examples:  load a table, run single-pass linear
+regression (the ``SELECT (linregr(y, x)).* FROM data`` of §4.1), the
+IRLS logistic driver (§4.2), k-means (§4.3), and the descriptive layer
+(profile + sketches + quantiles).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Table, synthetic_classification_table, \
+    synthetic_regression_table
+from repro.methods.linregr import linregr
+from repro.methods.logregr import logregr
+from repro.methods.kmeans import kmeans_fit
+from repro.methods.profile import profile
+from repro.methods.quantiles import quantiles
+from repro.methods.sketches import countmin_sketch, countmin_query, \
+    fm_distinct_count
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # -- 1. "CREATE TABLE data AS ..." ------------------------------------
+    tbl, b_true = synthetic_regression_table(key, 100_000, 8)
+    print(f"table: {tbl.n_rows} rows, columns {tbl.column_names}")
+
+    # -- 2. SELECT (linregr(y, x)).* FROM data ----------------------------
+    res = linregr(tbl, block_size=8192)
+    print("\n== linregr (single-pass UDA, §4.1) ==")
+    print("coef        :", [round(float(c), 3) for c in res.coef])
+    print("true b      :", [round(float(c), 3) for c in b_true])
+    print(f"r2={float(res.r2):.5f}  condition_no={float(res.condition_no):.2f}")
+
+    # -- 3. SELECT * FROM logregr('y', 'x', 'data') (IRLS driver, §4.2) ---
+    ctbl, cb = synthetic_classification_table(key, 50_000, 6)
+    lres = logregr(ctbl)
+    print("\n== logregr (multipass IRLS driver, §4.2) ==")
+    print(f"converged in {lres.n_iters} iterations; "
+          f"coef err {float(jnp.linalg.norm(lres.coef - cb)):.3f}; "
+          f"all |z|>2: {bool(jnp.all(jnp.abs(lres.z_stats) > 2))}")
+
+    # -- 4. k-means (large-state iteration, §4.3) --------------------------
+    kk = jax.random.split(key, 3)
+    centers = jnp.array([[0., 0.], [8., 8.], [0., 8.], [8., 0.]])
+    pts = centers[jax.random.randint(kk[0], (40_000,), 0, 4)] \
+        + 0.5 * jax.random.normal(kk[1], (40_000, 2))
+    km = kmeans_fit(Table.from_columns({"x": pts}), 4, key=kk[2])
+    print("\n== k-means (fused one-pass rounds, §4.3) ==")
+    print(f"converged={km.converged} iters={km.n_iters} "
+          f"sse_trace={[round(s) for s in km.sse_trace]}")
+
+    # -- 5. descriptive statistics (profile / sketches / quantiles) -------
+    items = jax.random.randint(kk[0], (200_000,), 0, 1000)
+    itbl = Table.from_columns({"item": items})
+    sk = countmin_sketch(itbl, depth=4, width=4096, block_size=65536)
+    est = countmin_query(sk, jnp.arange(5))
+    print("\n== descriptive layer ==")
+    print("count-min top ids est:", [int(e) for e in est])
+    print(f"FM distinct estimate (true 1000): "
+          f"{float(fm_distinct_count(itbl)):.0f}")
+    qs = quantiles(Table.from_columns({"v": tbl['y']}), [0.25, 0.5, 0.75])
+    print("y quartiles:", [round(float(q), 3) for q in qs])
+    prof = profile(tbl.select("y"))
+    print(f"profile(y): mean={float(prof['y']['mean']):.3f} "
+          f"std={float(prof['y']['std']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

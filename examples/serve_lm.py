@@ -1,0 +1,17 @@
+"""Batched LM serving demo: prefill + sampled decode through the cache
+path for three architecture families (dense GQA / hybrid RG-LRU / xLSTM)
+— the same decode_step the production decode cells dry-run at 32k/500k.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("stablelm-1.6b", "recurrentgemma-2b", "xlstm-350m"):
+        serve(arch, batch=4, prompt_len=12, gen_len=24, reduced=True)
+
+
+if __name__ == "__main__":
+    main()

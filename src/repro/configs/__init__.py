@@ -1,0 +1,15 @@
+"""Assigned-architecture registry: ``get_config(name)``, reduced smoke
+configs, and ShapeDtypeStruct input specs per (arch × shape) cell."""
+
+from .base import (
+    ARCHS,
+    SHAPES,
+    cells,
+    get_config,
+    input_specs,
+    reduced_config,
+    step_kind,
+)
+
+__all__ = ["ARCHS", "SHAPES", "cells", "get_config", "input_specs",
+           "reduced_config", "step_kind"]

@@ -1,0 +1,144 @@
+"""Architecture registry + input-shape cells.
+
+Ten architectures from the public pool, each with the four LM shapes:
+  train_4k     seq 4096  x global_batch 256   (train_step)
+  prefill_32k  seq 32768 x global_batch 32    (serve prefill)
+  decode_32k   kv 32768  x global_batch 128   (serve decode, 1 new token)
+  long_500k    kv 524288 x global_batch 1     (long-context decode)
+
+Skips (DESIGN.md §7): encoder-only archs have no decode; long_500k only
+for sub-quadratic families (hybrid, ssm).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+ARCHS: tuple[str, ...] = (
+    "moonshot-v1-16b-a3b",
+    "dbrx-132b",
+    "qwen3-8b",
+    "phi3-mini-3.8b",
+    "qwen3-14b",
+    "stablelm-1.6b",
+    "hubert-xlarge",
+    "recurrentgemma-2b",
+    "qwen2-vl-2b",
+    "xlstm-350m",
+)
+
+SHAPES: dict[str, dict] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+_SUBQUADRATIC = {"recurrentgemma-2b", "xlstm-350m"}
+_ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def _modname(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_modname(arch)}")
+    return mod.CONFIG
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_modname(arch)}")
+    return mod.REDUCED
+
+
+def step_kind(shape: str) -> str:
+    return SHAPES[shape]["kind"]
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    kind = SHAPES[shape]["kind"]
+    if arch in _ENCODER_ONLY and kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in _SUBQUADRATIC:
+        return False, "full quadratic attention at 512k indefensible"
+    return True, ""
+
+
+def cells(include_skipped: bool = False):
+    """Yield (arch, shape, supported, reason)."""
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_supported(arch, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok, why
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape: str, cfg: ModelConfig | None = None
+                ) -> dict[str, Any]:
+    """Batch pytree of ShapeDtypeStructs for the cell's step function."""
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape]
+    b, s = spec["batch"], spec["seq"]
+    kind = spec["kind"]
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            # modality frontend is a stub: precomputed frame embeddings
+            return {
+                "embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), f),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+            }
+        if cfg.family == "vlm":
+            s_vis = 256                       # stub patch embeddings
+            s_txt = s - s_vis
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s_txt), i32),
+                "embeddings": jax.ShapeDtypeStruct((b, s_vis, cfg.d_model),
+                                                   f),
+                "mrope_positions": jax.ShapeDtypeStruct((3, b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+
+    # decode: one new token against a seq-long cache
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def decode_cache_len(arch: str, shape: str) -> int:
+    return SHAPES[shape]["seq"]
+
+
+def input_batch_axes(arch: str, shape: str, cfg: ModelConfig | None = None
+                     ) -> dict[str, tuple]:
+    """Logical sharding axes for every input leaf (same structure as
+    input_specs).  Everything is batch-leading except M-RoPE positions."""
+    spec = input_specs(arch, shape, cfg)
+    out = {}
+    for name, leaf in spec.items():
+        if name == "mrope_positions":
+            out[name] = (None, "batch", None)
+        else:
+            out[name] = ("batch",) + (None,) * (len(leaf.shape) - 1)
+    return out

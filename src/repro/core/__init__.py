@@ -1,0 +1,52 @@
+"""MADJAX core: the paper's contribution as composable JAX modules.
+
+- Table          — sharded pytree-of-columns (macro-programming substrate)
+- Aggregate      — the (init, transition, merge, final) UDA pattern
+- run_local / run_sharded / run_stream / run_grouped — execution engines
+- host_driver / device_driver / counted_driver — multipass iteration
+- ConvexProgram + solvers — the §5.1 model/solver decoupling
+"""
+
+from .table import (
+    Table,
+    synthetic_classification_table,
+    synthetic_regression_table,
+)
+from .aggregates import (
+    Aggregate,
+    MERGE_MAX,
+    MERGE_MIN,
+    MERGE_SUM,
+    run_grouped,
+    run_local,
+    run_sharded,
+    run_stream,
+)
+from .driver import (
+    IterationResult,
+    counted_driver,
+    device_driver,
+    host_driver,
+    relative_change,
+)
+from .convex import (
+    ConvexProgram,
+    GradientAggregate,
+    HessianAggregate,
+    conjugate_gradient,
+    gradient_descent,
+    newton,
+    parallel_sgd,
+    sgd,
+)
+from .templates import ProfileAggregate, map_columns, one_hot_encode
+
+__all__ = [
+    "Table", "Aggregate", "MERGE_SUM", "MERGE_MAX", "MERGE_MIN",
+    "run_local", "run_sharded", "run_stream", "run_grouped",
+    "IterationResult", "host_driver", "device_driver", "counted_driver",
+    "relative_change", "ConvexProgram", "GradientAggregate",
+    "HessianAggregate", "gradient_descent", "sgd", "parallel_sgd", "newton",
+    "conjugate_gradient", "ProfileAggregate", "map_columns", "one_hot_encode",
+    "synthetic_regression_table", "synthetic_classification_table",
+]

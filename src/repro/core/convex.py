@@ -1,0 +1,280 @@
+"""The convex-optimization abstraction — MADlib §5.1 (Wisconsin layer).
+
+Decouples the *model* from the *solver*: a model is a sum-decomposable
+objective ``f(w) = Σ_i f_i(w)`` where each table row encodes one ``f_i``;
+solvers only see ``loss(params, block, mask)``.  Every Table-2 model
+(least squares, lasso, logistic regression, SVM, low-rank recommendation,
+CRF labeling) and — per DESIGN.md §3 — the LM train step plug into this
+one abstraction.
+
+Solvers provided:
+
+* :func:`gradient_descent` — full-batch GD; the gradient is computed as a
+  **user-defined aggregate** (transition = block gradient, merge = sum),
+  i.e. the same engine whose speedup the paper measures.
+* :func:`sgd` — stochastic gradient descent with Robbins-Monro stepsizes
+  (Eq. 1 of the paper), single-shard pass.
+* :func:`parallel_sgd` — Zinkevich-style parallelized SGD [47]: each
+  segment runs a local SGD pass over its rows, models are averaged with a
+  ``pmean`` (a one-round UDA merge).
+* :func:`newton` — Newton / IRLS steps with the Hessian accumulated by the
+  same UDA pattern (logistic regression §4.2 uses this).
+* :func:`conjugate_gradient` — MADlib's CG support module (Table 1), a
+  ``lax.while_loop`` over matvecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .aggregates import Aggregate, MERGE_SUM, run_sharded, run_local
+from .table import Table, Columns
+
+
+LossFn = Callable[[Any, Columns, jax.Array], jax.Array]
+# loss(params, block, mask) -> scalar SUM of f_i over unmasked rows.
+
+
+@dataclasses.dataclass
+class ConvexProgram:
+    """A sum-decomposable objective. ``loss`` must return the *sum* (not
+    mean) of per-row losses over the unmasked rows, so that gradients are
+    additive across blocks/segments (the UDA merge contract)."""
+
+    loss: LossFn
+    regularizer: Callable[[Any], jax.Array] | None = None  # added once, not per row
+
+    def total_loss(self, params, block, mask):
+        l = self.loss(params, block, mask)
+        if self.regularizer is not None:
+            l = l + self.regularizer(params)
+        return l
+
+
+# ---------------------------------------------------------------------------
+# Gradient / Hessian accumulation as UDAs.
+# ---------------------------------------------------------------------------
+
+class GradientAggregate(Aggregate):
+    """transition = add block gradient; merge = sum; final = (grad, loss, n)."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, program: ConvexProgram, params):
+        self.program = program
+        self.params = params
+
+    def init(self, block):
+        zg = jax.tree.map(jnp.zeros_like, self.params)
+        return {"grad": zg, "loss": jnp.zeros(()), "n": jnp.zeros((), jnp.int32)}
+
+    def transition(self, state, block, mask):
+        loss, grad = jax.value_and_grad(self.program.loss)(self.params, block, mask)
+        return {
+            "grad": jax.tree.map(jnp.add, state["grad"], grad),
+            "loss": state["loss"] + loss,
+            "n": state["n"] + jnp.sum(mask.astype(jnp.int32)),
+        }
+
+
+class HessianAggregate(Aggregate):
+    """Accumulates gradient and dense Hessian — valid for small parameter
+    dimension (the paper's regression setting, where k ≤ a few hundred)."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, program: ConvexProgram, params: jax.Array):
+        if jnp.ndim(params) != 1:
+            raise ValueError("HessianAggregate expects a flat parameter vector")
+        self.program = program
+        self.params = params
+
+    def init(self, block):
+        d = self.params.shape[0]
+        return {
+            "grad": jnp.zeros((d,)),
+            "hess": jnp.zeros((d, d)),
+            "loss": jnp.zeros(()),
+            "n": jnp.zeros((), jnp.int32),
+        }
+
+    def transition(self, state, block, mask):
+        loss, grad = jax.value_and_grad(self.program.loss)(self.params, block, mask)
+        hess = jax.hessian(self.program.loss)(self.params, block, mask)
+        return {
+            "grad": state["grad"] + grad,
+            "hess": state["hess"] + hess,
+            "loss": state["loss"] + loss,
+            "n": state["n"] + jnp.sum(mask.astype(jnp.int32)),
+        }
+
+
+def _run(agg, table, block_size):
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+# ---------------------------------------------------------------------------
+# Solvers.
+# ---------------------------------------------------------------------------
+
+def gradient_descent(program: ConvexProgram, table: Table, params0,
+                     *, stepsize: float = 1e-3, max_iters: int = 100,
+                     tol: float = 1e-6, block_size: int | None = None):
+    """Full-batch GD; each round's gradient is one UDA execution."""
+    params = params0
+    trace = []
+    for it in range(1, max_iters + 1):
+        out = _run(GradientAggregate(program, params), table, block_size)
+        g = out["grad"]
+        if program.regularizer is not None:
+            g = jax.tree.map(
+                jnp.add, g, jax.grad(program.regularizer)(params)
+            )
+        gnorm = float(
+            jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g)))
+        )
+        trace.append((float(out["loss"]), gnorm))
+        if gnorm < tol:
+            return params, trace, True
+        params = jax.tree.map(lambda p, gg: p - stepsize * gg, params, g)
+    return params, trace, False
+
+
+def sgd(program: ConvexProgram, table: Table, params0, *, stepsize: float = 1e-2,
+        epochs: int = 1, batch: int = 64, key: jax.Array | None = None,
+        anneal: bool = True):
+    """Single-shard SGD with Robbins-Monro annealing (paper Eq. 1).
+
+    The per-step update runs as one fused jit (shuffle indices on host,
+    gather + grad + update on device)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = table.n_rows
+    nb = n // batch
+
+    @jax.jit
+    def epoch_fn(params, perm, alpha):
+        def body(carry, idx):
+            params = carry
+            block = {k: v[idx] for k, v in table.columns.items()}
+            mask = jnp.ones((batch,), jnp.bool_)
+            g = jax.grad(program.total_loss)(params, block, mask)
+            params = jax.tree.map(lambda p, gg: p - alpha * gg / batch, params, g)
+            return params, None
+
+        idxs = perm[: nb * batch].reshape(nb, batch)
+        params, _ = jax.lax.scan(body, params, idxs)
+        return params
+
+    params = params0
+    for e in range(epochs):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n)
+        alpha = stepsize / (1.0 + e) if anneal else stepsize
+        params = epoch_fn(params, perm, alpha)
+    return params
+
+
+def parallel_sgd(program: ConvexProgram, table: Table, params0, *,
+                 stepsize: float = 1e-2, epochs: int = 1, batch: int = 64,
+                 mesh: Mesh | None = None, row_axes=("data",),
+                 key: jax.Array | None = None):
+    """Zinkevich model-averaging SGD [47]: local passes + pmean merge."""
+    mesh = mesh or table.mesh
+    if mesh is None:
+        return sgd(program, table, params0, stepsize=stepsize, epochs=epochs,
+                   batch=batch, key=key)
+    row_axes = tuple(row_axes or table.row_axes)
+    in_spec = jax.tree.map(
+        lambda v: P(row_axes, *([None] * (v.ndim - 1))), dict(table.columns)
+    )
+
+    def shard_fn(columns, params, key):
+        n = next(iter(columns.values())).shape[0]
+        # decorrelate shards: fold the shard index into the key
+        idx = jax.lax.axis_index(row_axes)
+        key = jax.random.fold_in(key, idx)
+        nb = n // batch
+
+        def epoch(params, ekey):
+            perm = jax.random.permutation(ekey, n)[: nb * batch].reshape(nb, batch)
+
+            def body(params, idx):
+                block = {k: v[idx] for k, v in columns.items()}
+                mask = jnp.ones((batch,), jnp.bool_)
+                g = jax.grad(program.total_loss)(params, block, mask)
+                return jax.tree.map(lambda p, gg: p - stepsize * gg / batch,
+                                    params, g), None
+
+            params, _ = jax.lax.scan(body, params, perm)
+            return params, None
+
+        params, _ = jax.lax.scan(epoch, params, jax.random.split(key, epochs))
+        # model averaging = one-round mean-merge UDA
+        return jax.tree.map(lambda p: jax.lax.pmean(p, row_axes), params)
+
+    fn = jax.jit(jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(in_spec, P(), P()),
+        out_specs=P(), check_vma=False,
+    ))
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return fn(dict(table.columns), params0, key)
+
+
+def newton(program: ConvexProgram, table: Table, params0: jax.Array, *,
+           max_iters: int = 20, tol: float = 1e-8, ridge: float = 1e-6,
+           block_size: int | None = None):
+    """Newton's method with UDA-accumulated gradient/Hessian (IRLS engine)."""
+    params = params0
+    trace = []
+    for it in range(1, max_iters + 1):
+        out = _run(HessianAggregate(program, params), table, block_size)
+        g, h = out["grad"], out["hess"]
+        if program.regularizer is not None:
+            g = g + jax.grad(program.regularizer)(params)
+            h = h + jax.hessian(program.regularizer)(params)
+        h = h + ridge * jnp.eye(h.shape[0])
+        step = jnp.linalg.solve(h, g)
+        params = params - step
+        delta = float(jnp.linalg.norm(step) / (jnp.linalg.norm(params) + 1e-12))
+        trace.append((float(out["loss"]), delta))
+        if delta < tol:
+            return params, trace, True
+    return params, trace, False
+
+
+def conjugate_gradient(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
+                       x0: jax.Array | None = None, *, tol: float = 1e-8,
+                       max_iters: int | None = None):
+    """MADlib's conjugate-gradient support module: solve A x = b for SPD A
+    given only ``matvec`` — fully on-device ``lax.while_loop``."""
+    n = b.shape[0]
+    max_iters = max_iters or 2 * n
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+
+    def cond(c):
+        _, r, _, rs, i = c
+        return jnp.logical_and(i < max_iters, rs > tol * tol)
+
+    def body(c):
+        x, r, p, rs, i = c
+        ap = matvec(p)
+        alpha = rs / (jnp.vdot(p, ap) + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r).real
+        p = r + (rs_new / (rs + 1e-30)) * p
+        return x, r, p, rs_new, i + 1
+
+    r0 = b - matvec(x0)
+    rs0 = jnp.vdot(r0, r0).real
+    x, r, p, rs, i = jax.lax.while_loop(cond, body, (x0, r0, r0, rs0, jnp.int32(0)))
+    return x, jnp.sqrt(rs), i

@@ -1,0 +1,161 @@
+"""Sharded Table abstraction — MADlib's distributed-by-hash table in JAX.
+
+A :class:`Table` is the macro-programming unit of MADJAX: a pytree of
+equal-length *columns* (arrays whose leading axis is the row axis), plus the
+sharding metadata that says how rows are distributed across the mesh.  It is
+the analogue of a Greenplum table ``DISTRIBUTED BY``: rows are partitioned
+over the batch-like mesh axes ("segments"), and every aggregate/driver in
+:mod:`repro.core` consumes tables.
+
+Unlike an RDBMS table, columns may be multi-dimensional (a ``DOUBLE
+PRECISION[]`` column is simply a ``(n_rows, d)`` array — the paper stores
+feature vectors exactly this way in §4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Columns = Mapping[str, jax.Array]
+
+
+def _n_rows(columns: Columns) -> int:
+    sizes = {k: v.shape[0] for k, v in columns.items()}
+    if len(set(sizes.values())) != 1:
+        raise ValueError(f"ragged table: column row counts differ: {sizes}")
+    return next(iter(sizes.values()))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """A pytree of named columns sharing a leading row axis.
+
+    ``columns`` maps column name -> array of shape ``(n_rows, ...)``.
+    ``mesh`` / ``row_axes`` record how rows are distributed (may be None for
+    a host-local table).
+    """
+
+    columns: dict[str, jax.Array]
+    mesh: Mesh | None = None
+    row_axes: tuple[str, ...] = ()
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names), (names, self.mesh, self.row_axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, mesh, row_axes = aux
+        return cls(dict(zip(names, children)), mesh, row_axes)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_columns(cls, columns: Columns) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        _n_rows(cols)
+        return cls(cols)
+
+    def distribute(self, mesh: Mesh, row_axes: Sequence[str] = ("data",)) -> "Table":
+        """Shard rows over ``row_axes`` of ``mesh`` (Greenplum DISTRIBUTED BY).
+
+        Rows must divide the product of the named axis sizes; callers pad via
+        :meth:`pad_to` first when needed.
+        """
+        row_axes = tuple(row_axes)
+        segs = int(np.prod([mesh.shape[a] for a in row_axes]))
+        n = self.n_rows
+        if n % segs:
+            raise ValueError(f"n_rows={n} not divisible by {segs} segments; pad first")
+        out = {}
+        for k, v in self.columns.items():
+            spec = P(row_axes, *([None] * (v.ndim - 1)))
+            out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+        return Table(out, mesh, row_axes)
+
+    # -- basic relational ops ----------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return _n_rows(self.columns)
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def select(self, *names: str) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.mesh, self.row_axes)
+
+    def with_column(self, name: str, values: jax.Array) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = values
+        _n_rows(cols)
+        return Table(cols, self.mesh, self.row_axes)
+
+    def map_rows(self, fn: Callable[[Columns], Columns]) -> "Table":
+        """Row-wise projection (a SELECT of expressions); traced & fused by XLA."""
+        return Table(dict(fn(self.columns)), self.mesh, self.row_axes)
+
+    def pad_to(self, n: int, fill: float = 0.0) -> tuple["Table", jax.Array]:
+        """Pad to ``n`` rows; returns (padded table with a __valid__ mask column)."""
+        cur = self.n_rows
+        if n < cur:
+            raise ValueError(f"pad_to({n}) smaller than n_rows={cur}")
+        cols = {}
+        for k, v in self.columns.items():
+            pad = [(0, n - cur)] + [(0, 0)] * (v.ndim - 1)
+            cols[k] = jnp.pad(v, pad, constant_values=fill)
+        mask = jnp.arange(n) < cur
+        return Table(cols, self.mesh, self.row_axes), mask
+
+    def blocks(self, block_size: int) -> Iterator["Table"]:
+        """Host-side iterator of row blocks (the out-of-core / streaming path)."""
+        n = self.n_rows
+        for start in range(0, n, block_size):
+            stop = min(start + block_size, n)
+            yield Table(
+                {k: v[start:stop] for k, v in self.columns.items()},
+                self.mesh,
+                self.row_axes,
+            )
+
+    def row_spec(self) -> "Table":
+        """ShapeDtypeStruct skeleton of this table (for lowering without data)."""
+        cols = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in self.columns.items()
+        }
+        return Table(cols, self.mesh, self.row_axes)
+
+
+def synthetic_regression_table(
+    key: jax.Array, n_rows: int, n_vars: int, noise: float = 0.1,
+    dtype: Any = jnp.float32,
+) -> tuple[Table, jax.Array]:
+    """The paper's linregr benchmark data: y = <b, x> + eps (§4.4)."""
+    kx, kb, ke = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n_rows, n_vars), dtype)
+    b = jax.random.normal(kb, (n_vars,), dtype)
+    y = x @ b + noise * jax.random.normal(ke, (n_rows,), dtype)
+    return Table.from_columns({"x": x, "y": y}), b
+
+
+def synthetic_classification_table(
+    key: jax.Array, n_rows: int, n_vars: int, dtype: Any = jnp.float32
+) -> tuple[Table, jax.Array]:
+    """Logistic data: Pr[y=1|x] = sigmoid(<b, x>) (§4.2)."""
+    kx, kb, ku = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n_rows, n_vars), dtype)
+    b = jax.random.normal(kb, (n_vars,), dtype)
+    p = jax.nn.sigmoid(x @ b)
+    y = (jax.random.uniform(ku, (n_rows,)) < p).astype(dtype)
+    return Table.from_columns({"x": x, "y": y}), b

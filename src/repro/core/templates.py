@@ -1,0 +1,104 @@
+"""Templated queries — MADlib §3.1.3.
+
+SQL's first-order-logic roots force queries to know their input schema;
+MADlib generates SQL from templates by interrogating the catalog.  JAX's
+trace-time shape polymorphism gives us the same thing natively: a
+"templated" op interrogates the *pytree structure* of a Table at trace
+time and synthesizes the computation for whatever columns are present.
+
+The flagship instance is :func:`profile_spec` (the MADlib ``profile``
+module): given an arbitrary table it emits, per numeric column, the
+univariate summary aggregate — whose state is a mixed-merge pytree
+(count=sum, min=min, max=max, moments=sum), exercising the per-leaf merge
+combinators of :mod:`repro.core.aggregates`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .aggregates import Aggregate, MERGE_MAX, MERGE_MIN, MERGE_SUM
+from .table import Table, Columns
+
+
+class ProfileAggregate(Aggregate):
+    """Schema-generic univariate statistics over every numeric column.
+
+    State per column: {count, sum, sumsq, min, max}; final adds mean/std.
+    The merge-op pytree is synthesized from the input schema at trace time —
+    this is the "templated query" pattern.
+    """
+
+    def __init__(self):
+        self.merge_ops = None  # synthesized in init()
+
+    def init(self, block: Columns):
+        state, ops = {}, {}
+        for name, col in block.items():
+            if not jnp.issubdtype(col.dtype, jnp.number):
+                continue
+            f = jnp.float32
+            state[name] = {
+                "count": jnp.zeros((), f),
+                "sum": jnp.zeros(col.shape[1:], f),
+                "sumsq": jnp.zeros(col.shape[1:], f),
+                "min": jnp.full(col.shape[1:], jnp.inf, f),
+                "max": jnp.full(col.shape[1:], -jnp.inf, f),
+            }
+            ops[name] = {
+                "count": MERGE_SUM, "sum": MERGE_SUM, "sumsq": MERGE_SUM,
+                "min": MERGE_MIN, "max": MERGE_MAX,
+            }
+        self.merge_ops = ops
+        return state
+
+    def transition(self, state, block: Columns, mask):
+        out = {}
+        for name, st in state.items():
+            col = block[name].astype(jnp.float32)
+            m = mask.astype(jnp.float32).reshape((-1,) + (1,) * (col.ndim - 1))
+            big = jnp.where(
+                mask.reshape((-1,) + (1,) * (col.ndim - 1)), col, jnp.inf
+            )
+            small = jnp.where(
+                mask.reshape((-1,) + (1,) * (col.ndim - 1)), col, -jnp.inf
+            )
+            out[name] = {
+                "count": st["count"] + jnp.sum(mask.astype(jnp.float32)),
+                "sum": st["sum"] + jnp.sum(col * m, axis=0),
+                "sumsq": st["sumsq"] + jnp.sum(col * col * m, axis=0),
+                "min": jnp.minimum(st["min"], jnp.min(big, axis=0)),
+                "max": jnp.maximum(st["max"], jnp.max(small, axis=0)),
+            }
+        return out
+
+    def final(self, state):
+        out = {}
+        for name, st in state.items():
+            n = jnp.maximum(st["count"], 1.0)
+            mean = st["sum"] / n
+            var = jnp.maximum(st["sumsq"] / n - mean ** 2, 0.0)
+            out[name] = dict(st, mean=mean, std=jnp.sqrt(var))
+        return out
+
+
+def map_columns(table: Table, fn: Callable[[str, jax.Array], jax.Array | None]
+                ) -> Table:
+    """Apply ``fn(name, column)`` to every column; drop columns mapped to
+    None.  A templated SELECT-expression generator."""
+    cols = {}
+    for name, col in table.columns.items():
+        new = fn(name, col)
+        if new is not None:
+            cols[name] = new
+    return Table(cols, table.mesh, table.row_axes)
+
+
+def one_hot_encode(table: Table, column: str, num_classes: int) -> Table:
+    """Templated categorical expansion: replaces an int column with a
+    ``(n, num_classes)`` one-hot float column (schema synthesized at trace)."""
+    col = table[column].astype(jnp.int32)
+    return table.with_column(column, jax.nn.one_hot(col, num_classes))

@@ -1,0 +1,9 @@
+from .pipeline import (
+    TokenStream,
+    corpus_profile,
+    make_lm_batches,
+    synthetic_batch,
+)
+
+__all__ = ["TokenStream", "corpus_profile", "make_lm_batches",
+           "synthetic_batch"]

@@ -1,0 +1,125 @@
+"""Data pipeline: deterministic synthetic token streams, sharded batch
+placement, background prefetch, and MADlib-sketch corpus profiling.
+
+The profiling layer is the paper's descriptive-statistics catalogue run as
+UDAs over the token stream (count-min token frequencies, FM distinct
+n-grams, histogram quantiles of sequence lengths) — MADlib's ``profile``
+applied to an LM corpus, used for data-quality monitoring in the trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.table import Table
+from ..core.aggregates import run_local
+from ..methods.sketches import CountMinAggregate, FMAggregate, \
+    countmin_query
+from ..methods.quantiles import HistogramAggregate
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Deterministic synthetic LM corpus: Zipfian unigrams with short-range
+    bigram structure (so models have something learnable)."""
+
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        # Zipf over a capped vocab for sampling stability
+        v_eff = min(self.vocab, 50_000)
+        ranks = np.arange(1, v_eff + 1)
+        probs = ranks ** (-self.zipf_a)
+        probs /= probs.sum()
+        while True:
+            base = rng.choice(v_eff, size=(self.batch, self.seq_len),
+                              p=probs)
+            # bigram structure: with p=0.5, token t+1 = (token t + 1) % v
+            rep = rng.random((self.batch, self.seq_len)) < 0.5
+            shifted = (np.roll(base, 1, axis=1) + 1) % v_eff
+            toks = np.where(rep, shifted, base).astype(np.int32)
+            yield {
+                "tokens": toks,
+                "labels": np.roll(toks, -1, axis=1).astype(np.int32),
+                "mask": np.ones((self.batch, self.seq_len), np.float32),
+            }
+
+
+def synthetic_batch(cfg, batch: int, seq: int, key) -> dict:
+    """One random batch matching input_specs (for tests/benches)."""
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab)
+    return {
+        "tokens": toks,
+        "labels": jnp.roll(toks, -1, axis=1),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+
+
+def make_lm_batches(stream: TokenStream, mesh=None, sharding=None,
+                    prefetch: int = 2) -> Iterator[dict]:
+    """Host->device pipeline with a background prefetch thread.
+
+    The producer thread keeps ``prefetch`` batches in flight (device_put
+    overlaps with compute — the data-pipeline guide's double-buffering
+    pattern)."""
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def produce():
+        for np_batch in stream:
+            if stop.is_set():
+                return
+            batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            if sharding is not None:
+                batch = {k: jax.device_put(v, sharding[k])
+                         for k, v in batch.items()}
+            q.put(batch)
+
+    t = threading.Thread(target=produce, daemon=True)
+    t.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()
+
+
+def corpus_profile(token_batches, *, vocab: int, n_batches: int = 4,
+                   cm_width: int = 4096) -> dict:
+    """MADlib-sketch profile of a token stream: heavy hitters (count-min),
+    distinct-token estimate (FM), token-id quantiles (histogram)."""
+    cm = CountMinAggregate(depth=4, width=cm_width, item_col="tokens")
+    fm = FMAggregate(item_col="tokens")
+    cm_state, fm_state, hist_state = None, None, None
+    hist = HistogramAggregate(0, vocab, bins=1024, value_col="tokens")
+    it = iter(token_batches)
+    for _ in range(n_batches):
+        b = next(it)
+        flat = jnp.asarray(b["tokens"]).reshape(-1)
+        tbl = {"tokens": flat}
+        mask = jnp.ones(flat.shape, jnp.bool_)
+        cm_state = cm.transition(
+            cm_state if cm_state is not None else cm.init(tbl), tbl, mask)
+        fm_state = fm.transition(
+            fm_state if fm_state is not None else fm.init(tbl), tbl, mask)
+        hist_state = hist.transition(
+            hist_state if hist_state is not None else hist.init(tbl), tbl,
+            mask)
+    top_ids = jnp.arange(64)
+    return {
+        "heavy_hitters": countmin_query(cm_state, top_ids),
+        "distinct_estimate": fm.final(fm_state),
+        "token_histogram": hist_state,
+    }

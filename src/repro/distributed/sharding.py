@@ -1,0 +1,175 @@
+"""Logical-axis sharding: the one place where model-code axis names meet
+mesh axes.
+
+Rules (DESIGN.md §6) — hierarchical DP/FSDP/TP:
+
+  "batch"  -> ("pod", "data")   activations' example axis
+  "fsdp"   -> "data"            ZeRO parameter sharding (intra-pod: fast ICI)
+  "tensor" -> "model"           TP: heads / d_ff / recurrence channels
+  "vocab"  -> "model"           vocab-parallel embedding + logits
+  "expert" -> "model"           MoE expert parallelism
+  "layers" -> None              scan-stacked layer axis (replicated)
+
+Parameters carry no "pod" axis -> replicated across pods; XLA then emits
+the inter-pod gradient all-reduce on the slow axis exactly once per step
+(the hierarchical scheme that scales to 1000+ nodes).
+
+``constrain`` is a contextual with_sharding_constraint: model code names
+logical axes; outside any mesh context it is a no-op (single-device smoke
+tests never see a mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "tensor": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+}
+
+_ctx = threading.local()
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def to_pspec(logical: tuple, mesh: Mesh, rules: dict | None = None) -> P:
+    """Map a tuple of logical axis names -> PartitionSpec valid on mesh."""
+    rules = rules or DEFAULT_RULES
+    axes = _mesh_axes(mesh)
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        m = rules.get(name)
+        if m is None:
+            out.append(None)
+            continue
+        if isinstance(m, tuple):
+            kept = tuple(a for a in m if a in axes)
+            out.append(kept if kept else None)
+        else:
+            out.append(m if m in axes else None)
+    return P(*out)
+
+
+def _divisible(dim: int, spec_entry, mesh: Mesh) -> bool:
+    if spec_entry is None:
+        return True
+    names = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    total = int(np.prod([mesh.shape[a] for a in names]))
+    return dim % total == 0
+
+
+def param_sharding(axes_tree, mesh: Mesh, params_tree,
+                   rules: dict | None = None):
+    """axes pytree (tuples of logical names) -> NamedSharding pytree.
+
+    Any dimension not divisible by its assigned mesh extent falls back to
+    replicated on that dim (correct, if less sharded — e.g. 10 heads on a
+    16-way tensor axis)."""
+
+    def one(logical, leaf):
+        spec = to_pspec(tuple(logical), mesh, rules)
+        entries = list(spec)
+        shape = leaf.shape
+        fixed = []
+        used: set = set()
+        for i, e in enumerate(entries):
+            # a mesh axis may appear at most once per spec: first logical
+            # dim wins (e.g. MoE "expert" takes the model axis; the
+            # per-expert "tensor" dims fall back to replicated)
+            names = e if isinstance(e, tuple) else ((e,) if e else ())
+            if any(n in used for n in names):
+                fixed.append(None)
+                continue
+            if i < len(shape) and not _divisible(shape[i], e, mesh):
+                fixed.append(None)
+            else:
+                fixed.append(e)
+                used.update(names)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(one, axes_tree, params_tree,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict | None = None):
+    """Enable logical with_sharding_constraint inside model code."""
+    prev = getattr(_ctx, "active", None)
+    _ctx.active = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ctx.active = prev
+
+
+def get_active():
+    """(mesh, rules) of the enclosing activation_sharding context, or
+    None.  Lets model code build shard_map-based blocks (a2a MoE) against
+    the live mesh."""
+    return getattr(_ctx, "active", None)
+
+
+def constrain(x, logical: tuple):
+    active = getattr(_ctx, "active", None)
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = to_pspec(logical, mesh, rules)
+    # divisibility guard on every constrained dim
+    entries = []
+    for i, e in enumerate(spec):
+        if e is not None and not _divisible(x.shape[i], e, mesh):
+            entries.append(None)
+        else:
+            entries.append(e)
+    # NOTE on dtype: XLA:CPU has no native bf16 ALU and promotes whole
+    # activation chains (and their collectives) to f32; on the TPU target
+    # these are bf16-native.  hlo_analysis detects promoted collectives
+    # (convert-rooted producers) and counts them at bf16 width.  A
+    # dtype-pinning optimization_barrier here was tried and REVERTED: it
+    # blocks the partitioner's all-reduce -> reduce-scatter merge at
+    # sequence-parallel boundaries (EXPERIMENTS.md §Perf, dbrx iter 5).
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def batch_sharding(mesh: Mesh, tree, rules: dict | None = None,
+                   logical_tree=None):
+    """Shard batch pytrees.  By default the leading axis maps to "batch";
+    ``logical_tree`` overrides with per-leaf logical tuples (e.g. M-RoPE
+    position tensors are (3, B, S) -> (None, "batch", None)).  Dims not
+    divisible by their mesh extent fall back to replicated."""
+
+    def one(leaf, logical=None):
+        logical = logical or (("batch",) + (None,) * (leaf.ndim - 1))
+        spec = to_pspec(tuple(logical), mesh, rules)
+        entries = []
+        for i, e in enumerate(spec):
+            if e is not None and not _divisible(leaf.shape[i], e, mesh):
+                entries.append(None)
+            else:
+                entries.append(e)
+        return NamedSharding(mesh, P(*entries))
+
+    if logical_tree is None:
+        return jax.tree.map(one, tree)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_logical = treedef.flatten_up_to(logical_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(l, tuple(lg)) for l, lg in zip(flat, flat_logical)])

@@ -1,0 +1,15 @@
+"""Micro-programming layer: Pallas TPU kernels for the compute hot spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dtype policy, interpret fallback)
+  ref.py    — pure-jnp oracle used by tests (tests/test_kernels.py sweeps
+              shapes/dtypes and asserts allclose)
+
+Kernels:
+  xtx            — blocked rank-TILE update accumulating X^T X and X^T y
+                   (the paper's linregr hot spot, §4.4, MXU-adapted)
+  kmeans_assign  — fused distance + argmin + per-centroid partial sums
+  countmin       — count-min sketch block update (hash + one-hot matmul)
+  flash_attention— causal GQA attention with online softmax (LM hot spot)
+"""

@@ -1,0 +1,28 @@
+"""Public wrapper for the countmin kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import countmin_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "width", "tile_n"))
+def countmin_block(items: jax.Array, mask: jax.Array, depth: int, width: int,
+                   *, tile_n: int = 2048) -> jax.Array:
+    """(N,) items + (N,) mask -> (depth, width) int32 count increments."""
+    n = items.shape[0]
+    tile = min(tile_n, max(_round_up(n, 8), 8))
+    np_ = _round_up(n, tile)
+    ip = jnp.pad(items.astype(jnp.int32), (0, np_ - n))[:, None]
+    mp = jnp.pad(mask.astype(jnp.int32), (0, np_ - n))[:, None]
+    interpret = jax.default_backend() != "tpu"
+    return countmin_padded(ip, mp, depth=depth, width=width, tile_n=tile,
+                           interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the countmin kernel — reuses the method-layer hash
+(the kernel must agree with what countmin_query reads)."""
+
+import jax
+import jax.numpy as jnp
+
+from ...methods.sketches import _hash_rows
+
+
+def countmin_block_ref(items, mask, depth, width):
+    idx = _hash_rows(items.astype(jnp.int32), depth, width)  # (depth, n)
+    upd = mask.astype(jnp.int32)
+
+    def row(i):
+        return jnp.zeros((width,), jnp.int32).at[i].add(upd)
+
+    return jax.vmap(row)(idx)

@@ -1,0 +1,42 @@
+"""Public wrapper for flash attention: (B, H, S, D) layout handling,
+tile-size selection, interpret fallback, jnp fallback for CPU training
+speed (interpret-mode Pallas is for validation, not throughput)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_padded
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "tile_q", "tile_k", "force"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, tile_q: int = 256,
+                    tile_k: int = 256, force: bool = False) -> jax.Array:
+    """q (B, Hq, S, D), k/v (B, Hk, S, D) -> (B, Hq, S, D).
+
+    On TPU (or with ``force=True``) runs the Pallas kernel; elsewhere the
+    jnp oracle (XLA-fused) keeps CPU tests fast while kernel tests pin the
+    Pallas body itself via force=True + interpret.
+    """
+    b, hq, s, d = q.shape
+    hk = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force):
+        return attention_ref(q, k, v, scale=scale, causal=causal)
+    tq = min(tile_q, s)
+    tk = min(tile_k, s)
+    assert s % tq == 0 and s % tk == 0, (s, tq, tk)
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hk, s, d)
+    vf = v.reshape(b * hk, s, d)
+    out = flash_attention_padded(
+        qf, kf, vf, scale=scale, causal=causal, tile_q=tq, tile_k=tk,
+        interpret=not on_tpu)
+    return out.reshape(b, hq, s, d)

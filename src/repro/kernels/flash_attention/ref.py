@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True):
+    """q (B, Hq, S, D), k/v (B, Hk, S, D) -> (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hk = k.shape[1]
+    group = hq // hk
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+    w = w / jnp.sum(w, -1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vx.astype(jnp.float32)).astype(q.dtype)

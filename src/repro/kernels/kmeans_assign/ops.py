@@ -1,0 +1,41 @@
+"""Public wrapper: pad rows to the tile, centroids/features to lane
+boundaries, dispatch compiled-vs-interpret, unpad."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import assign_reduce_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def assign_and_reduce(x: jax.Array, c: jax.Array, m: jax.Array, *,
+                      tile_n: int = 512):
+    """x (N,D), centroids (K,D), mask (N,) -> (assign, mind, sums, counts).
+
+    Padded rows get mask 0 (contribute nothing); padded centroid slots get
+    +inf-ish distance via large coordinates so argmin never picks them.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    dp = max(_round_up(d, 128), 128)
+    kp = max(_round_up(k, 8), 8)
+    tile = min(tile_n, max(_round_up(n, 8), 8))
+    np_ = _round_up(n, tile)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, dp - d)))
+    # pad centroids with a huge sentinel so padded slots never win argmin
+    cp = jnp.pad(c.astype(jnp.float32), ((0, kp - k), (0, dp - d)),
+                 constant_values=1e15)
+    cp = cp.at[:k, d:].set(0.0)
+    mp = jnp.pad(m.astype(jnp.float32), (0, np_ - n))[:, None]
+    interpret = jax.default_backend() != "tpu"
+    assign, mind, sums, counts = assign_reduce_padded(
+        xp, cp, mp, tile_n=tile, interpret=interpret)
+    return (assign[:n, 0], mind[:n, 0], sums[:k, :d], counts[:k, 0])

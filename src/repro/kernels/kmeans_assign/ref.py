@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the kmeans_assign kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def assign_and_reduce_ref(x, c, m):
+    """x (N,D), c (K,D), m (N,) -> (assign (N,), mind (N,), sums (K,D),
+    counts (K,))."""
+    x32 = x.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    d2 = (jnp.sum(x32 * x32, -1, keepdims=True) - 2.0 * x32 @ c32.T
+          + jnp.sum(c32 * c32, -1)[None])
+    assign = jnp.argmin(d2, -1)
+    mind = jnp.maximum(jnp.min(d2, -1), 0.0) * m
+    onehot = jax.nn.one_hot(assign, c.shape[0], dtype=jnp.float32) \
+        * m[:, None]
+    return assign, mind, onehot.T @ x32, jnp.sum(onehot, 0)

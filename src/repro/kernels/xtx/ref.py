@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the xtx kernel."""
+
+import jax.numpy as jnp
+
+
+def xtx_xty_ref(x, y):
+    """(N,K),(N,) -> (K,K) f32, (K,) f32."""
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    return x32.T @ x32, x32.T @ y32

@@ -1,0 +1,427 @@
+"""Optimized-HLO call-graph analysis: trip-count-corrected flops and
+collective bytes.
+
+Parses ``compiled.as_text()`` into computations, builds the call graph
+(while bodies, fusions, calls, conditionals), assigns every while a
+multiplicity from the scan registry (matched by tag substring in the
+op_name metadata), and walks from ENTRY accumulating:
+
+  * dot flops: 2 · prod(output dims) · prod(contracting dims)
+  * collective bytes per kind, with wire-byte convention:
+      all-reduce         2 × payload   (reduce-scatter + all-gather ring)
+      all-gather         output bytes
+      reduce-scatter     input bytes
+      all-to-all         input bytes
+      collective-permute input bytes
+    (recorded both raw and conventioned; EXPERIMENTS.md documents this)
+
+Elementwise flops are not counted (≪1% of a transformer step); the raw
+``cost_analysis()`` number is reported alongside as a floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred"
+    r"|c64|c128)\[([0-9,]*)\]")
+
+# tuple shapes contain /*index=N*/ comments (with '=' and '*'), so the
+# shape group must simply run to the matching close-paren (no nesting in
+# HLO shape syntax).
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<shape>\([^)]*\)|\S+)"
+    r"\s+(?P<kind>[\w\-]+)\((?P<rest>.*)$")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\(.*\{\s*$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_dims(shape_txt: str):
+    m = _SHAPE_RE.search(shape_txt)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    if not dims:
+        return dt, ()
+    return dt, tuple(int(d) for d in dims.split(","))
+
+
+def shape_bytes(shape_txt: str) -> int:
+    """Total bytes of every typed literal in the text (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_txt):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str
+    op_name: str
+
+
+def parse_computations(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    entry_marker = "__ENTRY__"
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                name = m.group("name")
+                if line.lstrip().startswith("ENTRY"):
+                    comps[entry_marker] = comps.setdefault(name, [])
+                cur = comps.setdefault(name, [])
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        mm = re.search(r'op_name="([^"]*)"', line)
+        cur.append(Op(m.group("name"), m.group("shape"), m.group("kind"),
+                      m.group("rest"), mm.group(1) if mm else ""))
+    return comps
+
+
+def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
+    _, out_dims = shape_dims(op.shape)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not mc:
+        return 0.0
+    cdims = [int(x) for x in mc.group(1).split(",")] if mc.group(1) else []
+    # lhs operand = first %name in rest
+    mo = re.search(r"%([\w\.\-]+)", op.rest)
+    if not mo:
+        return 0.0
+    lhs_shape = symtab.get(mo.group(1))
+    if lhs_shape is None:
+        return 0.0
+    _, lhs_dims = shape_dims(lhs_shape)
+    k = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2.0 * out_n * k
+
+
+def _trip_count(op_name: str, registry: dict[str, int],
+                unknown: list) -> int:
+    """Innermost matching tag wins: a nested scan's op_name path contains
+    every ancestor scope's tag too (e.g. layers_fwd/attn_q/attn_kv), and
+    this while's own trip count is the LAST tag on the path."""
+    best, best_pos = None, -1
+    for tag, n in registry.items():
+        pos = op_name.rfind(tag)
+        if pos > best_pos:
+            best, best_pos = n, pos
+    if best is None:
+        unknown.append(op_name or "<no-metadata>")
+        return 1
+    return best
+
+
+# scan tags whose bodies execute inside the Pallas flash-attention kernel
+# on the TPU target (kernels/flash_attention, validated vs its oracle):
+# their intermediates (chunk logits / probabilities / running stats) are
+# VMEM-resident, so HBM-byte accounting keeps only the streamed
+# dynamic-slice loads (q/k/v tiles) and dynamic-update-slice writes
+# (output tiles) — the kernel's actual HBM traffic.
+FLASH_TAGS = ("tagscan_attn_kv", "tagscan_attn_q")
+
+
+def analyze(text: str, registry: dict[str, int], *,
+            flash_model: bool = False) -> dict:
+    comps = parse_computations(text)
+    entry = comps.get("__ENTRY__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # per-computation symbol tables (name -> shape), incl. parameters
+    symtabs = {name: {op.name: op.shape for op in ops}
+               for name, ops in comps.items()}
+    opindex = {name: {op.name: op for op in ops}
+               for name, ops in comps.items()}
+
+    def _promoted_from_bf16(op: "Op", comp_name: str) -> bool:
+        """XLA:CPU promotes bf16 collectives to f32 (convert -> collective
+        -> convert).  On TPU these run at bf16 width; detect the pattern
+        and count payload at source width (see EXPERIMENTS.md §Method)."""
+        if "f32[" not in op.shape[:8]:
+            return False
+        mo = re.search(r"%([\w\.\-]+)", op.rest)
+        if not mo:
+            return False
+        prod = opindex[comp_name].get(mo.group(1))
+        if prod is None:
+            return False
+        if prod.kind == "convert":
+            src = re.search(r"%([\w\.\-]+)", prod.rest)
+            srcsh = symtabs[comp_name].get(src.group(1), "") if src else ""
+            return srcsh.startswith("bf16")
+        if prod.kind == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", prod.rest)
+            callee = comps.get(m.group(1)) if m else None
+            if callee and prod.shape.startswith("f32"):
+                # promoted if the fused producer upconverts a bf16 tensor
+                # of the same element count (XLA:CPU's promotion pattern)
+                _, out_dims = shape_dims(prod.shape)
+                n_out = 1
+                for dd in out_dims:
+                    n_out *= dd
+                for o in callee:
+                    if o.kind != "convert":
+                        continue
+                    src = re.search(r"%([\w\.\-]+)", o.rest)
+                    srcsh = (symtabs[m.group(1)].get(src.group(1), "")
+                             if src else "")
+                    if srcsh.startswith("bf16"):
+                        _, sdims = shape_dims(srcsh)
+                        n_src = 1
+                        for dd in sdims:
+                            n_src *= dd
+                        if n_src == n_out:
+                            return True
+        return False
+
+    flops_acc = defaultdict(float)
+    coll_raw = defaultdict(float)
+    coll_wire = defaultdict(float)
+    coll_count = defaultdict(int)
+    bytes_acc = [0.0]
+    unknown_whiles: list[str] = []
+
+    # ops that are pure bookkeeping (no HBM traffic of their own).  while
+    # is excluded because its carry is aliased in place (entry copies show
+    # up as explicit `copy` ops, which are counted).
+    _NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "while", "conditional", "call"}
+
+    def callee_names(op: Op) -> list[tuple[str, float]]:
+        """(computation, extra multiplicity) pairs an op invokes."""
+        out = []
+        if op.kind == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            trip = _trip_count(op.op_name, registry, unknown_whiles)
+            if mb:
+                out.append((mb.group(1), float(trip)))
+            if mc:
+                out.append((mc.group(1), float(trip)))
+        elif op.kind in ("fusion", "call", "map", "reduce", "reduce-window",
+                         "sort", "scatter", "select-and-scatter",
+                         "all-reduce", "reduce-scatter"):
+            for attr in ("calls", "to_apply"):
+                m = re.search(attr + r"=%?([\w\.\-]+)", op.rest)
+                if m:
+                    out.append((m.group(1), 1.0))
+        elif op.kind == "conditional":
+            for m in re.finditer(r"branch_computations=\{([^}]*)\}",
+                                 op.rest):
+                for nm in m.group(1).split(","):
+                    out.append((nm.strip().lstrip("%"), 1.0))
+            for m in re.finditer(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                                 op.rest):
+                out.append((m.group(1), 1.0))
+        return out
+
+    def _operand_names(op: Op) -> list[str]:
+        head = op.rest.split("metadata=")[0]
+        # operands are the leading %names before any attr=
+        head = re.split(r"\b(?:calls|to_apply|body|condition|dimensions"
+                        r"|sharding|channel_id)=", head)[0]
+        return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", head)]
+
+    def _operand_bytes(op: Op, symtab) -> float:
+        return float(sum(shape_bytes(symtab.get(nm, ""))
+                         for nm in _operand_names(op)))
+
+    def _fusion_stream_bytes(op: Op) -> float:
+        """Stream mode: charge only dynamic-slice outputs and dus updates
+        inside the fused computation (the HBM tile traffic of the Pallas
+        flash kernel; everything else is VMEM-resident)."""
+        m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is None:
+            return 0.0
+        ctab = symtabs[m.group(1)]
+        total = 0.0
+        for o in callee:
+            if o.kind == "dynamic-slice":
+                total += shape_bytes(o.shape)
+            elif o.kind == "dynamic-update-slice":
+                on = _operand_names(o)
+                if len(on) > 1:
+                    total += 2 * shape_bytes(ctab.get(on[1], ""))
+        return total
+
+    def _fusion_bytes(op: Op, symtab) -> float:
+        """Slice-aware bytes for a fusion: parameters consumed by
+        dynamic-slice inside the fused computation are charged at slice
+        size; a dynamic-update-slice root charges its update (the full
+        output is aliased in place)."""
+        m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is None:
+            return shape_bytes(op.shape) + _operand_bytes(op, symtab)
+        callee_tab = symtabs[m.group(1)]
+        # param op name -> param index
+        pidx = {}
+        for o in callee:
+            if o.kind == "parameter":
+                mi = re.match(r"\s*(\d+)", o.rest)
+                if mi:
+                    pidx[o.name] = int(mi.group(1))
+        sliced: dict[int, float] = {}
+        aliased: set[int] = set()
+        root_is_dus = False
+        dus_update = 0.0
+        for o in callee:
+            opnds = _operand_names(o)
+            if o.kind == "dynamic-slice" and opnds:
+                if opnds[0] in pidx:
+                    i = pidx[opnds[0]]
+                    sliced[i] = sliced.get(i, 0.0) + shape_bytes(o.shape)
+            elif o.kind == "dynamic-update-slice" and opnds:
+                if opnds[0] in pidx:
+                    aliased.add(pidx[opnds[0]])
+                if len(opnds) > 1:
+                    upd_sh = callee_tab.get(opnds[1], "")
+                    if not upd_sh and opnds[1] in pidx:
+                        # update comes in as a fusion parameter: price it
+                        # from the caller's operand shape
+                        outer = _operand_names(op)
+                        j = pidx[opnds[1]]
+                        if j < len(outer):
+                            upd_sh = symtab.get(outer[j], "")
+                    dus_update += shape_bytes(upd_sh)
+                root_is_dus = True  # (dus is virtually always the root)
+        total = 0.0
+        operands = _operand_names(op)
+        for i, nm in enumerate(operands):
+            sh = symtab.get(nm)
+            if sh is None:
+                continue
+            if i in sliced:
+                total += sliced[i]
+            elif i in aliased:
+                continue  # read-modify-write accounted via the update
+            else:
+                total += shape_bytes(sh)
+        if root_is_dus and dus_update > 0:
+            total += 2 * dus_update          # read + write of the window
+        else:
+            total += shape_bytes(op.shape)   # output write
+        return total
+
+    def walk(comp_name: str, mult: float, count_bytes, depth=0):
+        # count_bytes: False | True | "stream" (flash: slices/dus only)
+        ops = comps.get(comp_name)
+        if ops is None or depth > 64:
+            return
+        stream = count_bytes == "stream"
+        symtab = symtabs[comp_name]
+        for op in ops:
+            if op.kind == "dot":
+                flops_acc["dot"] += mult * _dot_flops(op, symtab)
+                if count_bytes and not stream:
+                    bytes_acc[0] += mult * (shape_bytes(op.shape)
+                                            + _operand_bytes(op, symtab))
+            elif op.kind in COLLECTIVES or any(
+                    op.kind == c + "-start" for c in COLLECTIVES):
+                kind = op.kind.replace("-start", "")
+                if kind == "all-gather":
+                    raw = shape_bytes(op.shape)          # output
+                    wire = raw
+                elif kind == "all-reduce":
+                    raw = shape_bytes(op.shape)
+                    wire = 2 * raw
+                else:
+                    # input operand bytes: first operand's shape
+                    mo = re.search(r"%([\w\.\-]+)", op.rest)
+                    raw = (shape_bytes(symtab.get(mo.group(1), ""))
+                           if mo else shape_bytes(op.shape))
+                    if raw == 0:
+                        raw = shape_bytes(op.shape)
+                    wire = raw
+                if _promoted_from_bf16(op, comp_name):
+                    raw *= 0.5   # runs at bf16 width on the target HW
+                    wire *= 0.5
+                    coll_count["bf16_promoted"] = \
+                        coll_count.get("bf16_promoted", 0) + 1
+                coll_raw[kind] += mult * raw
+                coll_wire[kind] += mult * wire
+                coll_count[kind] += 1
+                if count_bytes and not stream:
+                    bytes_acc[0] += mult * (shape_bytes(op.shape)
+                                            + _operand_bytes(op, symtab))
+            elif count_bytes and op.kind == "fusion":
+                if stream:
+                    # only the ds/dus traffic inside the fused computation
+                    b = _fusion_stream_bytes(op)
+                    bytes_acc[0] += mult * b
+                else:
+                    bytes_acc[0] += mult * _fusion_bytes(op, symtab)
+            elif count_bytes and op.kind == "dynamic-slice":
+                bytes_acc[0] += mult * 2 * shape_bytes(op.shape)
+            elif count_bytes and op.kind == "dynamic-update-slice":
+                upd = _operand_names(op)
+                sz = (shape_bytes(symtab.get(upd[1], "")) if len(upd) > 1
+                      else shape_bytes(op.shape))
+                bytes_acc[0] += mult * 2 * sz
+            elif count_bytes and not stream and op.kind not in _NO_BYTES:
+                bytes_acc[0] += mult * (shape_bytes(op.shape)
+                                        + _operand_bytes(op, symtab))
+            for callee, extra in callee_names(op):
+                # fusion-internal ops live in registers/VMEM: only while /
+                # call / conditional bodies keep HBM-bytes accounting on
+                if op.kind in ("while", "call", "conditional"):
+                    inner = count_bytes
+                    if (flash_model and op.kind == "while"
+                            and any(t in op.op_name for t in FLASH_TAGS)
+                            and count_bytes):
+                        inner = "stream"
+                else:
+                    inner = False
+                walk(callee, mult * extra, inner, depth + 1)
+
+    # find the real entry computation name
+    entry_name = next(n for n, ops in comps.items()
+                      if n != "__ENTRY__" and ops is entry)
+    walk(entry_name, 1.0, True)
+
+    return {
+        "dot_flops": flops_acc["dot"],
+        "bytes_accessed": bytes_acc[0],
+        "collective_raw_bytes": dict(coll_raw),
+        "collective_wire_bytes": dict(coll_wire),
+        "collective_counts": dict(coll_count),
+        "total_wire_bytes": float(sum(coll_wire.values())),
+        "unknown_whiles": sorted(set(unknown_whiles)),
+        "registry": dict(registry),
+    }

@@ -1,0 +1,53 @@
+"""Tagged scans: trace-time trip-count registry for HLO cost accounting.
+
+XLA's ``cost_analysis`` counts while-loop bodies ONCE, so any roofline
+built on it underreports scanned layers by the trip count.  Every scan in
+the model stack goes through :func:`tagged_scan`, which (a) wraps the scan
+in a ``jax.named_scope`` whose tag survives into the optimized HLO's
+``op_name`` metadata, and (b) records the trip count in a registry.  The
+HLO analyzer (hlo_analysis.py) walks the call graph and multiplies
+in-body flops/collective-bytes by the registered trip counts — including
+nested scans (chunked attention inside the layer scan) and the remat'd
+backward whiles (their op_name contains the same tag).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+import jax
+
+_local = threading.local()
+
+
+def _reg() -> dict[str, int]:
+    if not hasattr(_local, "registry"):
+        _local.registry = {}
+    return _local.registry
+
+
+def clear_registry():
+    _reg().clear()
+
+
+def get_registry() -> dict[str, int]:
+    return dict(_reg())
+
+
+def tagged_scan(tag: str, f: Callable, init, xs=None, *, length=None,
+                unroll: int = 1, reverse: bool = False):
+    """jax.lax.scan wrapped in a named scope + trip-count registration.
+
+    The scope name is length-qualified (``tag_L<n>``) so the same call
+    site traced at different lengths (e.g. across tests, or train vs
+    prefill in one process) registers unambiguously.  Tags must be chosen
+    so no tag is a substring of another (the HLO matcher is
+    substring-based over op_name paths; the innermost match wins)."""
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    qualified = f"{tag}_L{int(length)}"
+    _reg()[qualified] = int(length)
+    with jax.named_scope(qualified):
+        return jax.lax.scan(f, init, xs, length=length, unroll=unroll,
+                            reverse=reverse)

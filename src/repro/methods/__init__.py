@@ -1,0 +1,29 @@
+"""MADlib method library (paper Table 1 + Table 2 + Table 3), in JAX.
+
+Supervised:   linregr, logregr, naive_bayes, decision_tree, svm
+Unsupervised: kmeans, svd, lda, assoc_rules
+Descriptive:  sketches (count-min, Flajolet-Martin), quantiles, profile
+Support:      sparse_vector, array_ops, conjugate gradient (core.convex)
+Text (§5.2):  crf (features, Viterbi, MCMC), string_match (q-grams)
+SGD models (§5.1 Table 2): sgd_models
+"""
+
+from . import (  # noqa: F401
+    array_ops,
+    assoc_rules,
+    crf,
+    decision_tree,
+    kmeans,
+    lda,
+    linregr,
+    logregr,
+    naive_bayes,
+    profile,
+    quantiles,
+    sgd_models,
+    sketches,
+    sparse_vector,
+    string_match,
+    svd,
+    svm,
+)

@@ -1,0 +1,81 @@
+"""Array operations support module (paper Table 1).
+
+Thin, typed wrappers over jnp — the MADlib ``array_*`` UDF surface.  These
+exist so method code (and users) write intent-revealing calls; XLA fuses
+them away.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def array_add(a, b):
+    return jnp.add(a, b)
+
+
+def array_sub(a, b):
+    return jnp.subtract(a, b)
+
+
+def array_mult(a, b):
+    return jnp.multiply(a, b)
+
+
+def array_div(a, b):
+    return jnp.divide(a, b)
+
+
+def array_dot(a, b):
+    return jnp.vdot(a, b)
+
+
+def array_scalar_mult(a, s):
+    return a * s
+
+
+def array_sum(a, axis=None):
+    return jnp.sum(a, axis=axis)
+
+
+def array_mean(a, axis=None):
+    return jnp.mean(a, axis=axis)
+
+
+def array_max(a, axis=None):
+    return jnp.max(a, axis=axis)
+
+
+def array_min(a, axis=None):
+    return jnp.min(a, axis=axis)
+
+
+def array_sqrt(a):
+    return jnp.sqrt(a)
+
+
+def array_pow(a, p):
+    return jnp.power(a, p)
+
+
+def norm1(a):
+    return jnp.sum(jnp.abs(a))
+
+
+def norm2(a):
+    return jnp.sqrt(jnp.sum(a * a))
+
+
+def array_filter(a, predicate, fill=0.0):
+    """Masked filter with static shape (SQL WHERE over array elements)."""
+    return jnp.where(predicate(a), a, fill)
+
+
+def closest_column(matrix: jax.Array, vec: jax.Array):
+    """MADlib's closest_column(a, b) used by k-means (§4.3): index of the
+    matrix ROW closest to ``vec`` (MADlib stores centroids column-wise;
+    row-wise here) plus the distance."""
+    d2 = jnp.sum((matrix - vec[None, :]) ** 2, axis=-1)
+    idx = jnp.argmin(d2)
+    return idx, jnp.sqrt(d2[idx])

@@ -1,0 +1,114 @@
+"""Association rules (Apriori, paper Table 1) — level-wise driver + UDAs.
+
+Transactions are rows of a boolean item-incidence matrix ``(n, n_items)``.
+Support counting for a batch of candidate itemsets is one aggregate pass:
+transition computes, per row, whether each candidate is contained
+(min over the candidate's item columns) and accumulates counts; merge=sum.
+Candidate generation (join + prune) is k×k-scale driver work.
+
+Itemsets are fixed-width index tuples padded with -1 — static shapes,
+XLA-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.table import Table
+
+
+class SupportAggregate(Aggregate):
+    """Counts how many rows contain each candidate itemset."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, candidates: jax.Array):
+        self.candidates = candidates   # (C, width) int32, -1 padded
+
+    def init(self, block):
+        return jnp.zeros((self.candidates.shape[0],), jnp.float32)
+
+    def transition(self, state, block, mask):
+        items = block["items"].astype(jnp.float32)       # (B, I)
+        cand = self.candidates
+        padded = jnp.concatenate(
+            [items, jnp.ones((items.shape[0], 1), items.dtype)], axis=1)
+        idx = jnp.where(cand < 0, items.shape[1], cand)  # -1 -> always-true col
+        gathered = padded[:, idx]                        # (B, C, width)
+        contained = jnp.min(gathered, axis=-1)           # (B, C)
+        return state + jnp.sum(
+            contained * mask.astype(jnp.float32)[:, None], axis=0)
+
+
+@dataclasses.dataclass
+class AssocRules:
+    itemsets: list       # list of tuples
+    supports: dict       # itemset -> support fraction
+    rules: list          # (antecedent, consequent, support, confidence)
+
+
+def _count(table, candidates, block_size):
+    agg = SupportAggregate(jnp.asarray(candidates, jnp.int32))
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+def apriori(table: Table, *, min_support: float = 0.1,
+            min_confidence: float = 0.5, max_len: int = 3,
+            block_size: int | None = None) -> AssocRules:
+    n = table.n_rows
+    n_items = table["items"].shape[1]
+    supports: dict[tuple, float] = {}
+
+    # level 1
+    c1 = np.full((n_items, max_len), -1, np.int32)
+    c1[:, 0] = np.arange(n_items)
+    counts = np.asarray(_count(table, c1, block_size))
+    frequent = [
+        (i,) for i in range(n_items) if counts[i] / n >= min_support]
+    for i, s in zip(range(n_items), counts):
+        if s / n >= min_support:
+            supports[(i,)] = float(s / n)
+
+    level = frequent
+    for width in range(2, max_len + 1):
+        # join step: union of (width-1)-itemsets sharing a prefix
+        cands = sorted({tuple(sorted(set(a) | set(b)))
+                        for a in level for b in level
+                        if len(set(a) | set(b)) == width})
+        # prune step: all (width-1)-subsets must be frequent
+        cands = [c for c in cands
+                 if all(tuple(s) in supports
+                        for s in itertools.combinations(c, width - 1))]
+        if not cands:
+            break
+        arr = np.full((len(cands), max_len), -1, np.int32)
+        for r, c in enumerate(cands):
+            arr[r, :width] = c
+        counts = np.asarray(_count(table, arr, block_size))
+        level = []
+        for c, s in zip(cands, counts):
+            if s / n >= min_support:
+                supports[c] = float(s / n)
+                level.append(c)
+        if not level:
+            break
+
+    rules = []
+    for itemset, supp in supports.items():
+        if len(itemset) < 2:
+            continue
+        for r in range(1, len(itemset)):
+            for ante in itertools.combinations(itemset, r):
+                conf = supp / supports[tuple(sorted(ante))]
+                if conf >= min_confidence:
+                    cons = tuple(sorted(set(itemset) - set(ante)))
+                    rules.append((ante, cons, supp, conf))
+    return AssocRules(sorted(supports), supports, rules)

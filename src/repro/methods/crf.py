@@ -1,0 +1,240 @@
+"""Statistical text analytics (paper §5.2, Tables 2 & 3).
+
+Linear-chain CRF with:
+
+* **Text feature extraction** — hashed word features, position features
+  (first/last), and dictionary features, vectorized over token blocks
+  (the paper's feature-extractor set, micro-programming layer).
+* **Training** — the Table-2 "Labeling (CRF)" objective
+  ``Σ_k [Σ_j x_j F_j(y_k, z_k) − log Z(z_k)]`` as a ConvexProgram: the
+  log-partition is a forward (logsumexp) scan; gradients via jax.grad;
+  each table row is one sequence (one f_i).
+* **Viterbi inference** — max-product ``lax.scan`` with backpointers (the
+  paper's recursive-SQL / iterative-UDF implementations, done natively).
+* **MCMC inference** — Gibbs sampling and Metropolis-Hastings over label
+  sequences; the chain is a ``lax.scan`` carrying state across iterations
+  (the paper's window-aggregate macro-coordination pattern).
+
+Parameters: ``{"emit": (F, L), "trans": (L, L)}`` over hashed feature ids.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.convex import ConvexProgram
+from ..core.table import Table
+
+NEG = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction (hashed; static shapes).
+# ---------------------------------------------------------------------------
+
+def extract_features(tokens: jax.Array, n_features: int,
+                     dictionary: jax.Array | None = None) -> jax.Array:
+    """(B, T) int tokens -> (B, T, K) int feature ids (K small, static).
+
+    Features per position: hashed word id; hashed previous word (edge-ish
+    context); is-first / is-last position flags; optional dictionary
+    membership.  All map into one shared hashed feature space of size
+    ``n_features`` (feature hashing — in-database-friendly since the
+    schema stays fixed).
+    """
+    B, T = tokens.shape
+    word = (tokens.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)) \
+        % jnp.uint32(n_features)
+    prev = jnp.concatenate([jnp.zeros((B, 1), tokens.dtype),
+                            tokens[:, :-1]], axis=1)
+    prev_h = (prev.astype(jnp.uint32) * jnp.uint32(0x85EBCA77) + 1) \
+        % jnp.uint32(n_features)
+    pos = jnp.zeros((B, T), jnp.uint32)
+    pos = pos.at[:, 0].set(1)
+    pos = pos.at[:, -1].set(2)
+    pos_h = (pos * jnp.uint32(0xC2B2AE3D) + 7) % jnp.uint32(n_features)
+    feats = [word, prev_h, pos_h]
+    if dictionary is not None:
+        in_dict = dictionary[tokens.clip(0, dictionary.shape[0] - 1)]
+        feats.append(((in_dict.astype(jnp.uint32) * jnp.uint32(0x27D4EB2F))
+                      + 13) % jnp.uint32(n_features))
+    return jnp.stack(feats, axis=-1).astype(jnp.int32)   # (B, T, K)
+
+
+def emissions(params, feats: jax.Array) -> jax.Array:
+    """(B,T,K) feature ids -> (B,T,L) emission scores (sum of feat weights)."""
+    return jnp.sum(params["emit"][feats], axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Training objective (forward algorithm).
+# ---------------------------------------------------------------------------
+
+def crf_log_likelihood(params, feats: jax.Array, labels: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """Sum over batch of log p(y|z); mask (B,T) marks valid positions."""
+    emit = emissions(params, feats)                      # (B, T, L)
+    trans = params["trans"]                              # (L, L)
+    B, T, L = emit.shape
+    m = mask.astype(jnp.float32)
+
+    # score of the gold path
+    gold_emit = jnp.take_along_axis(emit, labels[..., None], -1)[..., 0]
+    gold_trans = trans[labels[:, :-1], labels[:, 1:]]
+    path = jnp.sum(gold_emit * m, 1) + jnp.sum(gold_trans * m[:, 1:], 1)
+
+    # log partition by forward scan
+    def step(alpha, xs):
+        e_t, m_t = xs                                    # (B, L), (B,)
+        nxt = jax.scipy.special.logsumexp(
+            alpha[:, :, None] + trans[None], axis=1) + e_t
+        return jnp.where(m_t[:, None] > 0, nxt, alpha), None
+
+    alpha0 = emit[:, 0]
+    alpha, _ = jax.lax.scan(
+        step, alpha0,
+        (jnp.swapaxes(emit[:, 1:], 0, 1), jnp.swapaxes(m[:, 1:], 0, 1)))
+    log_z = jax.scipy.special.logsumexp(alpha, axis=-1)
+    return jnp.sum(path - log_z)
+
+
+def crf_program(n_features: int, n_labels: int, mu: float = 1e-4
+                ) -> ConvexProgram:
+    """Table-2 CRF row as a ConvexProgram over rows {feats, labels, mask}."""
+
+    def loss(params, block, mask_rows):
+        ll = _per_seq_ll(params, block["feats"], block["labels"],
+                         block["mask"])
+        return -jnp.sum(ll * mask_rows.astype(jnp.float32))
+
+    def reg(params):
+        return 0.5 * mu * (jnp.sum(params["emit"] ** 2)
+                           + jnp.sum(params["trans"] ** 2))
+
+    return ConvexProgram(loss=loss, regularizer=reg)
+
+
+def _per_seq_ll(params, feats, labels, mask):
+    def one(f, y, m):
+        return crf_log_likelihood(params, f[None], y[None], m[None])
+    return jax.vmap(one)(feats, labels, mask)
+
+
+def crf_init_params(n_features: int, n_labels: int, key=None, scale=0.01):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    return {
+        "emit": scale * jax.random.normal(k1, (n_features, n_labels)),
+        "trans": scale * jax.random.normal(k2, (n_labels, n_labels)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Viterbi (most-likely labeling).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def viterbi_decode(params, feats: jax.Array, mask: jax.Array) -> jax.Array:
+    """(B,T,K) -> (B,T) argmax labelings via max-product scan."""
+    emit = emissions(params, feats)
+    trans = params["trans"]
+    B, T, L = emit.shape
+    m = mask.astype(jnp.float32)
+
+    def fwd(delta, xs):
+        e_t, m_t = xs
+        scores = delta[:, :, None] + trans[None]          # (B, L, L)
+        best = jnp.max(scores, axis=1) + e_t
+        ptr = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        keep = m_t[:, None] > 0
+        new = jnp.where(keep, best, delta)
+        ptr = jnp.where(keep, ptr,
+                        jnp.broadcast_to(jnp.arange(L)[None], (B, L)))
+        return new, ptr
+
+    delta0 = emit[:, 0]
+    delta, ptrs = jax.lax.scan(
+        fwd, delta0,
+        (jnp.swapaxes(emit[:, 1:], 0, 1), jnp.swapaxes(m[:, 1:], 0, 1)))
+    last = jnp.argmax(delta, axis=-1).astype(jnp.int32)   # (B,)
+
+    def bwd(nxt, ptr_t):
+        cur = jnp.take_along_axis(ptr_t, nxt[:, None], 1)[:, 0]
+        return cur, nxt
+
+    # bwd consumes ptrs[T-2..0]; y[i] = label at position i+1, final carry =
+    # label at position 0.
+    first, path_rev = jax.lax.scan(bwd, last, ptrs, reverse=True)
+    path = jnp.concatenate([first[None], path_rev], axis=0)  # (T, B)
+    return jnp.swapaxes(path, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# MCMC inference (Gibbs, Metropolis-Hastings).
+# ---------------------------------------------------------------------------
+
+def _site_logits(emit, trans, labels, t):
+    """Conditional logits for position t given neighbors (B, L)."""
+    B, T, L = emit.shape
+    left = jnp.where(t > 0, trans[labels[:, (t - 1) % T]], 0.0)
+    right = jnp.where(t < T - 1, trans[:, labels[:, (t + 1) % T]].T, 0.0)
+    return emit[:, t] + left + right
+
+
+def gibbs_sample(params, feats: jax.Array, mask: jax.Array, key: jax.Array,
+                 n_sweeps: int = 20):
+    """Systematic-scan Gibbs over label sequences; returns final sample and
+    per-position marginal estimates from the last half of the chain."""
+    emit = emissions(params, feats)
+    trans = params["trans"]
+    B, T, L = emit.shape
+    labels0 = jnp.argmax(emit, axis=-1).astype(jnp.int32)
+
+    def sweep(carry, key_s):
+        labels = carry
+
+        def site(labels, t):
+            logits = _site_logits(emit, trans, labels, t)
+            logits = jnp.where(mask[:, t, None] > 0, logits, 0.0)
+            k = jax.random.fold_in(key_s, t)
+            new = jax.random.categorical(k, logits).astype(jnp.int32)
+            new = jnp.where(mask[:, t] > 0, new, labels[:, t])
+            return labels.at[:, t].set(new), None
+
+        labels, _ = jax.lax.scan(site, labels, jnp.arange(T))
+        return labels, jax.nn.one_hot(labels, L)
+
+    keys = jax.random.split(key, n_sweeps)
+    labels, samples = jax.lax.scan(sweep, labels0, keys)
+    marginals = jnp.mean(samples[n_sweeps // 2:], axis=0)
+    return labels, marginals
+
+
+def mh_sample(params, feats: jax.Array, mask: jax.Array, key: jax.Array,
+              n_steps: int = 200):
+    """Single-site Metropolis-Hastings with uniform proposals."""
+    emit = emissions(params, feats)
+    trans = params["trans"]
+    B, T, L = emit.shape
+    labels0 = jnp.argmax(emit, axis=-1).astype(jnp.int32)
+
+    def step(carry, key_s):
+        labels = carry
+        kt, kl, ka = jax.random.split(key_s, 3)
+        t = jax.random.randint(kt, (), 0, T)
+        prop = jax.random.randint(kl, (B,), 0, L)
+        logits = _site_logits(emit, trans, labels, t)
+        cur = labels[:, t]
+        lp_cur = jnp.take_along_axis(logits, cur[:, None], 1)[:, 0]
+        lp_prop = jnp.take_along_axis(logits, prop[:, None], 1)[:, 0]
+        accept = jnp.log(jax.random.uniform(ka, (B,))) < (lp_prop - lp_cur)
+        accept = accept & (mask[:, t] > 0)
+        new = jnp.where(accept, prop, cur)
+        return labels.at[:, t].set(new), jnp.mean(accept.astype(jnp.float32))
+
+    keys = jax.random.split(key, n_steps)
+    labels, acc = jax.lax.scan(step, labels0, keys)
+    return labels, jnp.mean(acc)

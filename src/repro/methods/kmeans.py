@@ -1,0 +1,193 @@
+"""k-means clustering — the paper's large-state iteration example (§4.3).
+
+Two execution variants, per DESIGN.md §2:
+
+* ``two_pass`` (paper-faithful): PostgreSQL executes queries one at a time,
+  so one Lloyd round = an UPDATE of the ``centroid_id`` column (pass 1) and
+  a barycenter aggregate (pass 2).  We reproduce that dataflow: an explicit
+  assignment column plus a separate aggregation, with reassignment counting
+  for the paper's convergence criterion ("no or only few points got
+  reassigned").
+* ``fused`` (beyond-paper): XLA has no one-statement-at-a-time limitation —
+  assignment + barycenter + reassignment count fuse into ONE pass (the
+  paper's footnote 1 says standard SQL *cannot* express this).  Optionally
+  routed through the kernels/kmeans_assign Pallas kernel.
+
+Seeding: k-means++ [5], one distance UDA per seed pick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.table import Table
+
+
+def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(n,d),(k,d) -> (n,k) squared distances via the matmul identity."""
+    xx = jnp.sum(x * x, -1, keepdims=True)
+    cc = jnp.sum(c * c, -1)
+    return xx - 2.0 * (x @ c.T) + cc[None, :]
+
+
+class KMeansAggregate(Aggregate):
+    """One Lloyd round as a UDA.
+
+    Inter-iteration state = centroids (closed over, device-resident);
+    intra-iteration state = {sums, counts, sse, moved} — exactly the
+    paper's inter/intra split (§4.3.1).  ``moved`` is computed against the
+    previous assignment column when provided (two-pass mode) or against the
+    previous centroids' assignment (fused mode does both assigns in one
+    pass — still one data read)."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, centroids: jax.Array, prev_centroids: jax.Array | None,
+                 use_kernel: bool = False):
+        self.centroids = centroids
+        self.prev_centroids = prev_centroids
+        self.use_kernel = use_kernel
+
+    def init(self, block):
+        k, d = self.centroids.shape
+        f = self.centroids.dtype
+        return {
+            "sums": jnp.zeros((k, d), f),
+            "counts": jnp.zeros((k,), f),
+            "sse": jnp.zeros((), f),
+            "moved": jnp.zeros((), f),
+        }
+
+    def transition(self, state, block, mask):
+        x = block["x"]
+        m = mask.astype(x.dtype)
+        if "centroid_id" in block:
+            # two-pass mode: barycenters by the STORED assignment column
+            # (this pass does no closest-centroid computation — the paper's
+            # "avoid half of the closest-centroid calculations").
+            assign = block["centroid_id"].astype(jnp.int32)
+            d2 = _sq_dists(x, self.centroids)
+            mind = jnp.take_along_axis(d2, assign[:, None], 1)[:, 0]
+            onehot = jax.nn.one_hot(assign, self.centroids.shape[0],
+                                    dtype=x.dtype) * m[:, None]
+            sums = onehot.T @ x
+            counts = jnp.sum(onehot, axis=0)
+            moved = jnp.zeros((), x.dtype)
+        else:
+            if self.use_kernel:
+                from ..kernels.kmeans_assign import ops as ka_ops
+                assign, mind, sums, counts = ka_ops.assign_and_reduce(
+                    x, self.centroids, m)
+            else:
+                d2 = _sq_dists(x, self.centroids)
+                assign = jnp.argmin(d2, axis=-1)
+                mind = jnp.min(d2, axis=-1)
+                onehot = jax.nn.one_hot(assign, self.centroids.shape[0],
+                                        dtype=x.dtype) * m[:, None]
+                sums = onehot.T @ x
+                counts = jnp.sum(onehot, axis=0)
+            if self.prev_centroids is not None:
+                # fused mode: both assignments in ONE data read (footnote 1:
+                # SQL can't; XLA can).
+                prev_assign = jnp.argmin(_sq_dists(x, self.prev_centroids),
+                                         -1)
+                moved = jnp.sum((prev_assign != assign) * m)
+            else:
+                moved = jnp.zeros((), x.dtype)
+        return {
+            "sums": state["sums"] + sums,
+            "counts": state["counts"] + counts,
+            "sse": state["sse"] + jnp.sum(mind * m),
+            "moved": state["moved"] + moved,
+        }
+
+    def final(self, s):
+        safe = jnp.maximum(s["counts"][:, None], 1.0)
+        new_c = jnp.where(s["counts"][:, None] > 0, s["sums"] / safe,
+                          self.centroids)
+        return {"centroids": new_c, "sse": s["sse"], "moved": s["moved"],
+                "counts": s["counts"]}
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    centroids: jax.Array
+    sse: float
+    n_iters: int
+    converged: bool
+    sse_trace: list
+
+
+def _run(agg, table, block_size):
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+def kmeans_pp_seed(table: Table, k: int, key: jax.Array,
+                   x_col: str = "x") -> jax.Array:
+    """k-means++ seeding [5]: one D² pass per pick (k UDA rounds)."""
+    x = table[x_col]
+    n = x.shape[0]
+    key, sub = jax.random.split(key)
+    first = x[jax.random.randint(sub, (), 0, n)]
+    cents = first[None, :]
+    for _ in range(1, k):
+        d2 = jnp.min(_sq_dists(x, cents), axis=-1)
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        cents = jnp.concatenate([cents, x[idx][None, :]], axis=0)
+    return cents
+
+
+def kmeans_fit(table: Table, k: int, *, key: jax.Array | None = None,
+               max_iters: int = 50, reassign_frac_tol: float = 0.0,
+               variant: str = "fused", block_size: int | None = None,
+               init_centroids: jax.Array | None = None,
+               use_kernel: bool = False, x_col: str = "x") -> KMeansResult:
+    """Lloyd's algorithm under a MADlib driver (§3.1.2 pattern)."""
+    assert variant in ("fused", "two_pass")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    t = Table({"x": table[x_col]}, table.mesh, table.row_axes)
+    cents = (init_centroids if init_centroids is not None
+             else kmeans_pp_seed(t, k, key))
+    n = t.n_rows
+    prev = None
+    assign_col = None
+    sse_trace = []
+    converged = False
+    it = 0
+
+    if variant == "two_pass":
+        # statement 0: materialize the assignment column
+        # (UPDATE points SET centroid_id = closest_column(centroids, coords))
+        assign_col = jnp.argmin(_sq_dists(t["x"], cents), axis=-1)
+
+    for it in range(1, max_iters + 1):
+        if variant == "two_pass":
+            # statement 1 (data pass 1): barycenters by stored assignment
+            data = t.with_column("centroid_id", assign_col)
+            out = _run(KMeansAggregate(cents, None, use_kernel), data,
+                       block_size)
+            # statement 2 (data pass 2): refresh assignments, count moves
+            new_assign = jnp.argmin(
+                _sq_dists(t["x"], out["centroids"]), -1)
+            moved = float(jnp.sum(new_assign != assign_col))
+            assign_col = new_assign
+        else:
+            out = _run(KMeansAggregate(cents, prev, use_kernel), t,
+                       block_size)
+            moved = float(out["moved"])
+        prev = cents
+        cents = out["centroids"]
+        sse_trace.append(float(out["sse"]))
+        if it > 1 and moved <= reassign_frac_tol * n:
+            converged = True
+            break
+    return KMeansResult(cents, sse_trace[-1], it, converged, sse_trace)

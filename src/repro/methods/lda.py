@@ -1,0 +1,95 @@
+"""Latent Dirichlet Allocation (paper Table 1) — variational EM as UDA + driver.
+
+Documents are table rows holding bag-of-words count vectors.  One EM round
+is one aggregate pass: the transition runs a few mean-field updates per
+document (γ, φ) against the current topics β and accumulates expected
+topic-word counts; merge = sum; final renormalizes into new topics.  The
+outer loop is a MADlib driver with perplexity-based convergence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.table import Table
+
+
+class LDAEStepAggregate(Aggregate):
+    """E-step + sufficient stats: state = (topics expected counts, bound)."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, log_beta: jax.Array, alpha: float = 0.1,
+                 inner_iters: int = 12):
+        self.log_beta = log_beta           # (K, V) log topic-word probs
+        self.alpha = alpha
+        self.inner_iters = inner_iters
+
+    def init(self, block):
+        return {
+            "counts": jnp.zeros_like(self.log_beta),
+            "bound": jnp.zeros(()),
+            "n_tokens": jnp.zeros(()),
+        }
+
+    def transition(self, state, block, mask):
+        docs = block["counts"].astype(jnp.float32)       # (B, V)
+        m = mask.astype(jnp.float32)
+        K = self.log_beta.shape[0]
+
+        def per_doc(doc):
+            gamma = jnp.full((K,), self.alpha + doc.sum() / K)
+
+            def step(gamma, _):
+                elog_th = jax.scipy.special.digamma(gamma) \
+                    - jax.scipy.special.digamma(gamma.sum())
+                log_phi = elog_th[:, None] + self.log_beta   # (K, V)
+                log_phi = log_phi - jax.scipy.special.logsumexp(
+                    log_phi, axis=0, keepdims=True)
+                gamma = self.alpha + jnp.exp(log_phi) @ doc
+                return gamma, log_phi
+
+            gamma, log_phi = jax.lax.scan(
+                step, gamma, None, length=self.inner_iters)
+            log_phi = log_phi[-1] if log_phi.ndim == 3 else log_phi
+            phi = jnp.exp(log_phi)
+            stats = phi * doc[None, :]                      # (K, V)
+            ll = jnp.sum(doc * jax.scipy.special.logsumexp(
+                log_phi + self.log_beta, axis=0))
+            return stats, ll
+
+        stats, lls = jax.vmap(per_doc)(docs)
+        return {
+            "counts": state["counts"] + jnp.einsum("bkv,b->kv", stats, m),
+            "bound": state["bound"] + jnp.sum(lls * m),
+            "n_tokens": state["n_tokens"] + jnp.sum(docs.sum(-1) * m),
+        }
+
+
+def lda_fit(table: Table, n_topics: int, vocab: int, *,
+            alpha: float = 0.1, eta: float = 0.01, max_iters: int = 30,
+            tol: float = 1e-4, key: jax.Array | None = None,
+            block_size: int | None = None):
+    """Variational EM; returns (topics (K,V), perplexity trace)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    beta = jax.random.dirichlet(key, jnp.full((vocab,), 1.0), (n_topics,))
+    log_beta = jnp.log(jnp.maximum(beta, 1e-12))
+    trace = []
+    prev_perp = jnp.inf
+    for it in range(max_iters):
+        agg = LDAEStepAggregate(log_beta, alpha)
+        if table.mesh is not None:
+            out = run_sharded(agg, table, block_size=block_size)
+        else:
+            out = run_local(agg, table, block_size=block_size)
+        counts = out["counts"] + eta
+        log_beta = jnp.log(counts) - jnp.log(
+            jnp.sum(counts, -1, keepdims=True))
+        perp = float(jnp.exp(-out["bound"] / jnp.maximum(out["n_tokens"], 1)))
+        trace.append(perp)
+        if abs(prev_perp - perp) / max(perp, 1e-9) < tol:
+            break
+        prev_perp = perp
+    return jnp.exp(log_beta), trace

@@ -1,0 +1,130 @@
+"""Binary logistic regression — the paper's multipass example (§4.2).
+
+Paper-faithful solver: Newton's method as *iteratively reweighted least
+squares*, ``β ← (X^T D X)^{-1} X^T D z`` with ``D = diag(p(1-p))`` and
+``z = Xβ + D^{-1}(y - p)``.  Each iteration is one UDA execution
+(transition accumulates ``X^T D X`` and ``X^T D z``; merge = sum); the
+outer loop is a driver that keeps state device-resident (§3.1.2).
+
+Also provided: the §5.1 SGD solver over the same objective, for the
+Table-2 benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.convex import ConvexProgram, sgd as sgd_solver, parallel_sgd
+from ..core.table import Table
+
+
+@dataclasses.dataclass
+class LogregrResult:
+    coef: jax.Array
+    log_likelihood: jax.Array
+    std_err: jax.Array
+    z_stats: jax.Array
+    p_values: jax.Array
+    n_iters: int
+    converged: bool
+
+
+class IRLSAggregate(Aggregate):
+    """One IRLS round: accumulate X^T D X, X^T D z, and the log-likelihood."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, beta: jax.Array):
+        self.beta = beta
+
+    def init(self, block):
+        d = block["x"].shape[-1]
+        return {
+            "xdx": jnp.zeros((d, d)),
+            "xdz": jnp.zeros((d,)),
+            "ll": jnp.zeros(()),
+            "n": jnp.zeros(()),
+        }
+
+    def transition(self, state, block, mask):
+        x = block["x"]
+        y = block["y"]
+        m = mask.astype(x.dtype)
+        eta = x @ self.beta
+        p = jax.nn.sigmoid(eta)
+        w = jnp.maximum(p * (1.0 - p), 1e-10) * m          # D diagonal
+        z = eta + (y - p) / jnp.maximum(p * (1.0 - p), 1e-10)
+        xw = x * w[:, None]
+        ll = jnp.sum(m * (y * eta - jax.nn.softplus(eta)))
+        return {
+            "xdx": state["xdx"] + xw.T @ x,
+            "xdz": state["xdz"] + xw.T @ z,
+            "ll": state["ll"] + ll,
+            "n": state["n"] + jnp.sum(m),
+        }
+
+
+def _run(agg, table, block_size):
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+def logregr(table: Table, *, x_col: str = "x", y_col: str = "y",
+            max_iters: int = 30, tol: float = 1e-6,
+            block_size: int | None = None) -> LogregrResult:
+    """``SELECT * FROM logregr('y', 'x', 'data')`` — IRLS driver."""
+    t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
+              table.row_axes)
+    d = t["x"].shape[-1]
+    beta = jnp.zeros((d,))
+    converged = False
+    it = 0
+    state = None
+    for it in range(1, max_iters + 1):
+        state = _run(IRLSAggregate(beta), t, block_size)
+        ridge = 1e-8 * jnp.eye(d)
+        new_beta = jnp.linalg.solve(state["xdx"] + ridge, state["xdz"])
+        delta = float(jnp.linalg.norm(new_beta - beta)
+                      / (jnp.linalg.norm(beta) + 1e-12))
+        beta = new_beta
+        if delta < tol:
+            converged = True
+            break
+    # Wald statistics from the final Fisher information (X^T D X)^{-1}.
+    cov = jnp.linalg.inv(state["xdx"] + 1e-8 * jnp.eye(d))
+    se = jnp.sqrt(jnp.maximum(jnp.diag(cov), 0.0))
+    z = beta / jnp.maximum(se, 1e-30)
+    p = 2.0 * (1.0 - jax.scipy.stats.norm.cdf(jnp.abs(z)))
+    return LogregrResult(beta, state["ll"], se, z, p, it, converged)
+
+
+# ---------------------------------------------------------------------------
+# §5.1 SGD path (Table 2 "Logistic Regression" row).
+# ---------------------------------------------------------------------------
+
+def logistic_program(mu: float = 0.0) -> ConvexProgram:
+    """Σ log(1 + exp(-y·xᵀw)) with y ∈ {−1,+1} encoded from {0,1}."""
+
+    def loss(params, block, mask):
+        sgn = 2.0 * block["y"] - 1.0
+        return jnp.sum(jax.nn.softplus(-sgn * (block["x"] @ params))
+                       * mask.astype(jnp.float32))
+
+    reg = (lambda p: 0.5 * mu * jnp.sum(p ** 2)) if mu > 0 else None
+    return ConvexProgram(loss=loss, regularizer=reg)
+
+
+def logregr_sgd(table: Table, *, epochs: int = 5, stepsize: float = 0.5,
+                batch: int = 128, key=None, mu: float = 0.0) -> jax.Array:
+    d = table["x"].shape[-1]
+    prog = logistic_program(mu)
+    if table.mesh is not None:
+        return parallel_sgd(prog, table, jnp.zeros((d,)), stepsize=stepsize,
+                            epochs=epochs, batch=batch, key=key)
+    return sgd_solver(prog, table, jnp.zeros((d,)), stepsize=stepsize,
+                      epochs=epochs, batch=batch, key=key)

@@ -1,0 +1,86 @@
+"""Naive Bayes classification (paper Table 1) as a single-pass UDA.
+
+Gaussian NB over continuous features: per-class sufficient statistics
+(count, per-feature sum, sum-of-squares) accumulate in the transition;
+merge = sum; final converts to class priors + per-class feature
+mean/variance.  Prediction is a pure map (a templated SELECT).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.table import Table
+
+
+@dataclasses.dataclass
+class NaiveBayesModel:
+    log_prior: jax.Array   # (C,)
+    mean: jax.Array        # (C, d)
+    var: jax.Array         # (C, d)
+
+
+jax.tree_util.register_pytree_node(
+    NaiveBayesModel,
+    lambda m: ((m.log_prior, m.mean, m.var), None),
+    lambda _, c: NaiveBayesModel(*c),
+)
+
+
+class NaiveBayesAggregate(Aggregate):
+    merge_ops = MERGE_SUM
+
+    def __init__(self, num_classes: int, var_smoothing: float = 1e-6):
+        self.num_classes = num_classes
+        self.var_smoothing = var_smoothing
+
+    def init(self, block):
+        d = block["x"].shape[-1]
+        c = self.num_classes
+        return {
+            "count": jnp.zeros((c,)),
+            "sum": jnp.zeros((c, d)),
+            "sumsq": jnp.zeros((c, d)),
+        }
+
+    def transition(self, state, block, mask):
+        x = block["x"]
+        y = block["y"].astype(jnp.int32)
+        onehot = jax.nn.one_hot(y, self.num_classes) * \
+            mask.astype(jnp.float32)[:, None]
+        return {
+            "count": state["count"] + jnp.sum(onehot, 0),
+            "sum": state["sum"] + onehot.T @ x,
+            "sumsq": state["sumsq"] + onehot.T @ (x * x),
+        }
+
+    def final(self, s):
+        n = jnp.maximum(s["count"][:, None], 1.0)
+        mean = s["sum"] / n
+        var = jnp.maximum(s["sumsq"] / n - mean ** 2, 0.0) + self.var_smoothing
+        total = jnp.maximum(jnp.sum(s["count"]), 1.0)
+        log_prior = jnp.log(jnp.maximum(s["count"], 1e-12) / total)
+        return NaiveBayesModel(log_prior, mean, var)
+
+
+def naive_bayes_fit(table: Table, num_classes: int, *,
+                    block_size: int | None = None) -> NaiveBayesModel:
+    agg = NaiveBayesAggregate(num_classes)
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+@jax.jit
+def naive_bayes_predict(model: NaiveBayesModel, x: jax.Array) -> jax.Array:
+    """argmax_c [ log p(c) + Σ_j log N(x_j; μ_cj, σ²_cj) ]"""
+    ll = -0.5 * jnp.sum(
+        jnp.log(2.0 * jnp.pi * model.var)[None]
+        + (x[:, None, :] - model.mean[None]) ** 2 / model.var[None],
+        axis=-1,
+    )
+    return jnp.argmax(model.log_prior[None] + ll, axis=-1)

@@ -1,0 +1,30 @@
+"""Data profiling (paper Table 1) — driver wrapper over the templated
+ProfileAggregate (core.templates), plus distinct-count enrichment via the
+FM sketch: MADlib's ``profile`` emits one summary row per column of an
+arbitrary table.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.aggregates import run_local, run_sharded
+from ..core.table import Table
+from ..core.templates import ProfileAggregate
+from .sketches import FMAggregate
+
+
+def profile(table: Table, *, distinct_counts: bool = False,
+            block_size: int | None = None) -> dict:
+    """Univariate stats for every numeric column (+ approximate distinct
+    counts for integer columns when requested)."""
+    run = (lambda a, t: run_sharded(a, t, block_size=block_size)
+           if t.mesh is not None else run_local(a, t, block_size=block_size))
+    out = dict(run(ProfileAggregate(), table))
+    if distinct_counts:
+        for name, col in table.columns.items():
+            if jnp.issubdtype(col.dtype, jnp.integer) and col.ndim == 1:
+                t = Table({"item": col}, table.mesh, table.row_axes)
+                est = run(FMAggregate(item_col="item"), t)
+                out[name]["approx_distinct"] = est
+    return out

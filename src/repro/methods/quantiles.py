@@ -1,0 +1,52 @@
+"""Quantiles (paper Table 1) via a mergeable histogram sketch UDA.
+
+A fixed-range equi-width histogram is the classic in-database quantile
+sketch: transition bins values; merge = sum of bins; final interpolates
+the requested quantiles from the cumulative histogram.  A preliminary
+min/max UDA pass fixes the range (two passes total — the paper's driver
+pattern, with the first pass being the ProfileAggregate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.templates import ProfileAggregate
+from ..core.table import Table
+
+
+class HistogramAggregate(Aggregate):
+    merge_ops = MERGE_SUM
+
+    def __init__(self, lo: float, hi: float, bins: int = 4096,
+                 value_col: str = "v"):
+        self.lo, self.hi, self.bins = float(lo), float(hi), bins
+        self.value_col = value_col
+
+    def init(self, block):
+        return jnp.zeros((self.bins,), jnp.float32)
+
+    def transition(self, state, block, mask):
+        v = block[self.value_col].astype(jnp.float32)
+        t = (v - self.lo) / max(self.hi - self.lo, 1e-30)
+        idx = jnp.clip((t * self.bins).astype(jnp.int32), 0, self.bins - 1)
+        return state.at[idx].add(mask.astype(jnp.float32))
+
+
+def quantiles(table: Table, qs, *, value_col: str = "v", bins: int = 4096,
+              block_size: int | None = None) -> jax.Array:
+    """Approximate quantiles with error ≤ range/bins."""
+    t = Table({value_col: table[value_col]}, table.mesh, table.row_axes)
+    run = (lambda a: run_sharded(a, t, block_size=block_size)
+           if t.mesh is not None else run_local(a, t, block_size=block_size))
+    prof = run(ProfileAggregate())[value_col]
+    lo, hi = float(prof["min"]), float(prof["max"])
+    hist = run(HistogramAggregate(lo, hi, bins, value_col))
+    cdf = jnp.cumsum(hist) / jnp.maximum(jnp.sum(hist), 1.0)
+    qs = jnp.asarray(qs, jnp.float32)
+    idx = jnp.searchsorted(cdf, qs)
+    idx = jnp.clip(idx, 0, bins - 1)
+    width = (hi - lo) / bins
+    return lo + (idx.astype(jnp.float32) + 0.5) * width

@@ -1,0 +1,66 @@
+"""The §5.1 Table-2 model zoo under ONE abstraction.
+
+Every model is a ConvexProgram (sum-decomposable objective over table
+rows) handed to the same SGD solver — the Wisconsin contribution's thesis:
+"specify the model, not the algorithm".  The benchmark harness
+(benchmarks/bench_sgd_models.py) fits all six rows of Table 2 through
+this registry.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.convex import ConvexProgram, sgd, parallel_sgd
+from ..core.table import Table
+from .logregr import logistic_program
+from .svm import svm_program
+from .svd import lowrank_program
+from .crf import crf_program, crf_init_params
+
+
+def least_squares_program(mu: float = 0.0) -> ConvexProgram:
+    """Σ (xᵀw − y)²"""
+
+    def loss(params, block, mask):
+        r = block["x"] @ params - block["y"]
+        return jnp.sum(r * r * mask.astype(jnp.float32))
+
+    reg = (lambda p: 0.5 * mu * jnp.sum(p ** 2)) if mu > 0 else None
+    return ConvexProgram(loss=loss, regularizer=reg)
+
+
+def lasso_program(mu: float = 0.1) -> ConvexProgram:
+    """Σ (xᵀw − y)² + μ‖w‖₁ (subgradient of the L1 term)."""
+
+    def loss(params, block, mask):
+        r = block["x"] @ params - block["y"]
+        return jnp.sum(r * r * mask.astype(jnp.float32))
+
+    return ConvexProgram(loss=loss,
+                         regularizer=lambda p: mu * jnp.sum(jnp.abs(p)))
+
+
+# name -> (program factory, params initializer)
+REGISTRY: dict[str, Callable] = {
+    "least_squares": least_squares_program,
+    "lasso": lasso_program,
+    "logistic": logistic_program,
+    "svm": svm_program,
+    "recommendation": lowrank_program,
+    "crf": crf_program,
+}
+
+
+def fit_sgd_model(name: str, table: Table, params0, *, epochs: int = 5,
+                  stepsize: float = 0.1, batch: int = 128, key=None,
+                  **prog_kwargs):
+    prog = REGISTRY[name](**prog_kwargs)
+    if table.mesh is not None:
+        return parallel_sgd(prog, table, params0, stepsize=stepsize,
+                            epochs=epochs, batch=batch, key=key)
+    return sgd(prog, table, params0, stepsize=stepsize, epochs=epochs,
+               batch=batch, key=key)

@@ -1,0 +1,147 @@
+"""Count-Min and Flajolet-Martin sketches (paper Table 1, "Descriptive
+Statistics") as UDAs.
+
+Both are the canonical examples of why the UDA/merge contract matters:
+* Count-Min merge = elementwise **sum** of the (d, w) counter matrix.
+* FM merge = elementwise **OR** of bitmaps (= max over {0,1}) — this is
+  the aggregate that exercises the non-sum merge combinator.
+
+Hashing is a vectorized multiply-shift family (no data-dependent Python),
+so the transition compiles to pure gather/scatter-adds.  The Count-Min
+transition can be routed through kernels/countmin (Pallas).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregates import Aggregate, MERGE_MAX, MERGE_SUM, run_local, \
+    run_sharded
+from ..core.table import Table
+
+# multiply-shift hash constants (odd 64→32-bit multipliers per row)
+_PRIMES = jnp.array(
+    [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1,
+     0xD3A2646C, 0xFD7046C5, 0xB55A4F09], dtype=jnp.uint32)
+
+
+def _fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 finalizer: full-avalanche mixing (uniform low bits — needed
+    for the FM lowest-set-bit statistic)."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_rows(items: jax.Array, depth: int, width: int) -> jax.Array:
+    """(n,) int32 items -> (depth, n) bucket indices in [0, width)."""
+    x = items.astype(jnp.uint32)
+    mults = _PRIMES[:depth][:, None]
+    h = _fmix32(x[None, :] * mults + mults)
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+class CountMinAggregate(Aggregate):
+    """ε-δ frequency sketch: state (depth, width) int32 counters."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, depth: int = 4, width: int = 1024,
+                 use_kernel: bool = False, item_col: str = "item"):
+        self.depth, self.width = depth, width
+        self.use_kernel = use_kernel
+        self.item_col = item_col
+
+    def init(self, block):
+        return jnp.zeros((self.depth, self.width), jnp.int32)
+
+    def transition(self, state, block, mask):
+        items = block[self.item_col].astype(jnp.int32)
+        if self.use_kernel:
+            from ..kernels.countmin import ops as cm_ops
+            return state + cm_ops.countmin_block(
+                items, mask, self.depth, self.width)
+        idx = _hash_rows(items, self.depth, self.width)  # (depth, n)
+        upd = mask.astype(jnp.int32)
+        def row(s, i):
+            return s.at[i].add(upd)
+        return jax.vmap(row)(state, idx)
+
+
+def countmin_query(sketch: jax.Array, items: jax.Array) -> jax.Array:
+    """Point-estimate frequencies: min over depth rows."""
+    depth, width = sketch.shape
+    idx = _hash_rows(items.astype(jnp.int32), depth, width)
+    vals = jax.vmap(lambda row, i: row[i])(sketch, idx)  # (depth, n)
+    return jnp.min(vals, axis=0)
+
+
+class FMAggregate(Aggregate):
+    """Flajolet-Martin distinct-count sketch.
+
+    State: (num_hashes, bits) {0,1} bitmaps; transition ORs in the bit at
+    the position of the lowest set bit of each item hash; merge = OR (max).
+    Final: harmonic-ish FM estimate 2^E[r] / φ, φ ≈ 0.77351.
+    """
+
+    merge_ops = MERGE_MAX
+
+    def __init__(self, num_hashes: int = 8, bits: int = 32,
+                 item_col: str = "item"):
+        self.num_hashes, self.bits = num_hashes, bits
+        self.item_col = item_col
+
+    def init(self, block):
+        return jnp.zeros((self.num_hashes, self.bits), jnp.int32)
+
+    def transition(self, state, block, mask):
+        items = block[self.item_col].astype(jnp.uint32)
+        mults = _PRIMES[:self.num_hashes][:, None]
+        h = _fmix32(items[None, :] * mults + mults)
+        # position of lowest set bit; full-zero hash -> bits-1
+        r = _lowest_set_bit(h, self.bits)               # (H, n)
+        onehots = jax.nn.one_hot(r, self.bits, dtype=jnp.int32)
+        onehots = onehots * mask.astype(jnp.int32)[None, :, None]
+        return jnp.maximum(state, jnp.max(onehots, axis=1))
+
+    def final(self, state):
+        # R_i = index of lowest UNSET bit in bitmap i.
+        unset = state == 0
+        idx = jnp.argmax(unset, axis=1)
+        all_set = jnp.all(~unset, axis=1)
+        r = jnp.where(all_set, self.bits, idx).astype(jnp.float32)
+        # geometric mean over hash functions (Jensen-corrected FM estimate)
+        return 2.0 ** jnp.mean(r) / 0.77351
+
+
+def _lowest_set_bit(h: jax.Array, bits: int) -> jax.Array:
+    positions = jnp.arange(bits, dtype=jnp.uint32)
+    bitset = (h[..., None] >> positions) & jnp.uint32(1)
+    has = bitset == 1
+    first = jnp.argmax(has, axis=-1)
+    none_set = ~jnp.any(has, axis=-1)
+    return jnp.where(none_set, bits - 1, first).astype(jnp.int32)
+
+
+def countmin_sketch(table: Table, *, depth: int = 4, width: int = 1024,
+                    item_col: str = "item",
+                    block_size: int | None = None) -> jax.Array:
+    agg = CountMinAggregate(depth, width, item_col=item_col)
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)
+
+
+def fm_distinct_count(table: Table, *, num_hashes: int = 8, bits: int = 32,
+                      item_col: str = "item",
+                      block_size: int | None = None) -> jax.Array:
+    agg = FMAggregate(num_hashes, bits, item_col=item_col)
+    if table.mesh is not None:
+        return run_sharded(agg, table, block_size=block_size)
+    return run_local(agg, table, block_size=block_size)

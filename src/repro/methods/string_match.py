@@ -1,0 +1,82 @@
+"""Approximate string matching via q-grams (paper §5.2, Table 3).
+
+The paper builds a PostgreSQL trigram index; here a corpus of strings is a
+table of fixed-width byte arrays, the "index" is a hashed 3-gram incidence
+matrix built by one UDA pass, and a query is a similarity join: hash the
+query's trigrams, score every document by Jaccard similarity against the
+incidence matrix (one matmul), threshold.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aggregates import Aggregate, MERGE_MAX
+from ..core.table import Table
+
+
+def encode_strings(strings: list[str], width: int = 64) -> jax.Array:
+    """Pack python strings into (n, width) uint8 (0-padded)."""
+    out = np.zeros((len(strings), width), np.uint8)
+    for i, s in enumerate(strings):
+        b = s.lower().encode("utf-8")[:width]
+        out[i, :len(b)] = np.frombuffer(b, np.uint8)
+    return jnp.asarray(out)
+
+
+def trigram_signature(chars: jax.Array, n_buckets: int = 512) -> jax.Array:
+    """(n, W) uint8 -> (n, n_buckets) {0,1} hashed-trigram incidence."""
+    c = chars.astype(jnp.uint32)
+    t1, t2, t3 = c[:, :-2], c[:, 1:-1], c[:, 2:]
+    valid = (t1 > 0) & (t2 > 0) & (t3 > 0)
+    h = (t1 * jnp.uint32(0x9E3779B1) + t2 * jnp.uint32(0x85EBCA77)
+         + t3 * jnp.uint32(0xC2B2AE3D))
+    h = (h ^ (h >> 13)) % jnp.uint32(n_buckets)
+    onehot = jax.nn.one_hot(h.astype(jnp.int32), n_buckets, dtype=jnp.float32)
+    onehot = onehot * valid.astype(jnp.float32)[..., None]
+    return jnp.clip(jnp.sum(onehot, axis=1), 0.0, 1.0)
+
+
+class TrigramIndexAggregate(Aggregate):
+    """Builds the corpus incidence matrix; merge = elementwise OR (max).
+
+    State is (n_docs, n_buckets) — rows for documents outside the shard
+    stay zero, so OR-merge reassembles the full index (the scatter-style
+    UDA the paper implements with a GIN index)."""
+
+    merge_ops = MERGE_MAX
+
+    def __init__(self, n_docs: int, n_buckets: int = 512):
+        self.n_docs, self.n_buckets = n_docs, n_buckets
+
+    def init(self, block):
+        return jnp.zeros((self.n_docs, self.n_buckets), jnp.float32)
+
+    def transition(self, state, block, mask):
+        sig = trigram_signature(block["chars"], self.n_buckets)
+        sig = sig * mask.astype(jnp.float32)[:, None]
+        ids = block["doc_id"].astype(jnp.int32)
+        return jnp.maximum(state, jnp.zeros_like(state).at[ids].max(sig))
+
+
+@jax.jit
+def jaccard_scores(index: jax.Array, query_sig: jax.Array) -> jax.Array:
+    """(D, B), (B,) -> (D,) Jaccard similarities."""
+    inter = index @ query_sig
+    union = jnp.sum(index, -1) + jnp.sum(query_sig) - inter
+    return inter / jnp.maximum(union, 1.0)
+
+
+def approx_match(corpus_index: jax.Array, query: str, *,
+                 threshold: float = 0.3, width: int = 64,
+                 n_buckets: int | None = None):
+    """Return (doc indices, scores) of approximate matches for ``query``."""
+    n_buckets = n_buckets or corpus_index.shape[1]
+    q = encode_strings([query], width)
+    sig = trigram_signature(q, n_buckets)[0]
+    scores = jaccard_scores(corpus_index, sig)
+    idx = jnp.nonzero(scores >= threshold, size=corpus_index.shape[0],
+                      fill_value=-1)[0]
+    return idx, scores

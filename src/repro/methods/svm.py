@@ -1,0 +1,46 @@
+"""Support vector machines (paper Table 1; Table 2 "Classification" row).
+
+Linear SVM via the §5.1 convex abstraction: hinge loss Σ (1 − y·xᵀw)₊ with
+L2 regularization, solved by SGD (the paper's own SVM is SGD-based) — plus
+a deterministic subgradient descent path for reproducible tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.convex import ConvexProgram, gradient_descent, parallel_sgd, sgd
+from ..core.table import Table
+
+
+def svm_program(mu: float = 1e-3) -> ConvexProgram:
+    def loss(params, block, mask):
+        sgn = 2.0 * block["y"] - 1.0          # {0,1} -> {-1,+1}
+        margin = jnp.maximum(0.0, 1.0 - sgn * (block["x"] @ params))
+        return jnp.sum(margin * mask.astype(jnp.float32))
+
+    return ConvexProgram(
+        loss=loss, regularizer=lambda p: 0.5 * mu * jnp.sum(p ** 2))
+
+
+def svm_fit(table: Table, *, mu: float = 1e-3, epochs: int = 10,
+            stepsize: float = 0.1, batch: int = 128, key=None,
+            solver: str = "sgd") -> jax.Array:
+    d = table["x"].shape[-1]
+    prog = svm_program(mu)
+    w0 = jnp.zeros((d,))
+    if solver == "gd":
+        w, _, _ = gradient_descent(prog, table, w0, stepsize=stepsize / 100,
+                                   max_iters=200, tol=1e-5)
+        return w
+    if table.mesh is not None:
+        return parallel_sgd(prog, table, w0, stepsize=stepsize, epochs=epochs,
+                            batch=batch, key=key)
+    return sgd(prog, table, w0, stepsize=stepsize, epochs=epochs, batch=batch,
+               key=key)
+
+
+@jax.jit
+def svm_predict(w: jax.Array, x: jax.Array) -> jax.Array:
+    return (x @ w > 0).astype(jnp.int32)

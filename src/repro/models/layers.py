@@ -1,0 +1,365 @@
+"""Shared neural layers (pure functional, explicit param pytrees).
+
+Sharding is expressed via *logical axis names* attached at init time
+(see repro.distributed.sharding): every parameter leaf is created through
+``param(key, shape, logical_axes)`` which records the mapping in a
+parallel pytree of PartitionSpecs-by-name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis vocabulary (mapped to mesh axes in distributed/sharding.py):
+#   "batch"   — per-example axis               -> ("pod", "data")
+#   "fsdp"    — parameter shard axis (ZeRO)    -> "data"
+#   "tensor"  — tensor-parallel axis           -> "model"
+#   "vocab"   — vocabulary shards              -> "model"
+#   "expert"  — MoE expert shards              -> "model"
+#   None      — replicated
+
+
+@dataclasses.dataclass
+class ParamStore:
+    """Accumulates parameter arrays + their logical axis annotations."""
+    params: dict
+    axes: dict
+    key: jax.Array
+    dtype: Any
+
+    def __init__(self, key, dtype=jnp.float32):
+        self.params, self.axes = {}, {}
+        self.key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, name: str, shape, logical, scale=None, init="normal"):
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        scale = scale if scale is not None else fan_in ** -0.5
+        if init == "normal":
+            w = scale * jax.random.normal(self._next(), shape, jnp.float32)
+        elif init == "zeros":
+            w = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            raise ValueError(init)
+        self.params[name] = w.astype(self.dtype)
+        self.axes[name] = logical
+        return self.params[name]
+
+    def subtree(self, name: str):
+        sub = ParamStore.__new__(ParamStore)
+        sub.params, sub.axes = {}, {}
+        sub.key = self._next()
+        sub.dtype = self.dtype
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    """Variance in f32, data path in the input dtype — keeps the residual
+    stream and its COTANGENTS bf16 (an f32 normalize chain drags f32
+    activation gradients through every TP all-reduce; §Perf iteration)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * gamma
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float):
+    return theta ** (-jnp.arange(0, d_head // 2, dtype=jnp.float32)
+                     / (d_head // 2))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x (..., S, H, Dh), positions (..., S) -> rotated x."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (...,S,1,Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections, theta=10_000.0):
+    """Qwen2-VL M-RoPE: positions_thw (3, ..., S) give separate temporal /
+    height / width indices; frequency bands are split by ``sections``
+    (summing to d_head//2) and each band rotates by its own component."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # (Dh/2,)
+    # static band assignment (numpy at trace time — no device control flow)
+    import numpy as np
+    sec = np.cumsum((0,) + tuple(sections))
+    band = jnp.asarray(
+        np.clip(np.searchsorted(sec[1:], np.arange(dh // 2), side="right"),
+                0, 2))                                      # (Dh/2,) {0,1,2}
+    pos = jnp.take_along_axis(
+        positions_thw[..., None].astype(jnp.float32),       # (3,...,S,1)
+        jnp.broadcast_to(band, positions_thw.shape[1:] + (dh // 2,))[None]
+        .astype(jnp.int32),
+        axis=0)[0]                                          # (...,S,Dh/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training: full or windowed; GQA by construction)
+# ---------------------------------------------------------------------------
+
+def attention_scores(q, k, v, *, causal: bool, window: int | None = None,
+                     use_flash: bool = False):
+    """q (B,S,H,Dh), k/v (B,S,Hk,Dh) -> (B,S,H,Dh).
+
+    ``window``: local (sliding) attention half-width in tokens.
+    ``use_flash``: route through the Pallas kernel (TPU hot path).
+    """
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    if use_flash and window is None:
+        from ..kernels.flash_attention.ops import flash_attention
+        out = flash_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=causal)
+        return jnp.moveaxis(out, 1, 2)
+    group = h // hk
+    qg = q.reshape(b, s, hk, group, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    idx = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window is not None:
+        mask &= idx[:, None] - idx[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool, window: int | None = None,
+                      chunk_q: int = 1024, chunk_k: int = 1024):
+    """Flash-style chunked attention in pure JAX: scans query chunks
+    (outer) and KV chunks (inner) with online-softmax running stats, so the
+    (S, S) score matrix never materializes — required for the 32k/500k
+    shapes.  Same semantics as attention_scores (tests assert)."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    group = h // hk
+    cq = min(chunk_q, s)
+    ck = min(chunk_k, s)
+    assert s % cq == 0 and s % ck == 0
+    nq, nk = s // cq, s // ck
+    scale = dh ** -0.5
+    qs = jnp.swapaxes(q.reshape(b, nq, cq, hk, group, dh), 0, 1)
+    ks = jnp.swapaxes(k.reshape(b, nk, ck, hk, dh), 0, 1)
+    vs = jnp.swapaxes(v.reshape(b, nk, ck, hk, dh), 0, 1)
+    rows = jnp.arange(cq)
+    cols = jnp.arange(ck)
+
+    def q_step(_, qin):
+        qi, qc = qin                                   # (B,cq,Hk,G,D)
+        qcs = (qc * jnp.asarray(scale, qc.dtype))
+
+        def kv_step(carry, kin):
+            m, l, acc = carry
+            ki, kc, vc = kin
+            # bf16 operands, f32 accumulation (MXU-native; keeps the
+            # gathered/saved tensors half-width)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qcs, kc,
+                                preferred_element_type=jnp.float32)
+            grow = qi * cq + rows                      # global q positions
+            gcol = ki * ck + cols
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= grow[:, None] >= gcol[None, :]
+            if window is not None:
+                mask &= grow[:, None] - gcol[None, :] < window
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_cur = jnp.max(logits, -1)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, group, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hk, group, cq), jnp.float32)
+        a0 = jnp.zeros((b, hk, group, cq, dh), jnp.float32)
+        from ..launch.scan_registry import tagged_scan
+        # checkpoint: recompute logits/mask in the backward (the
+        # flash-attention backward) instead of saving (cq, ck) residuals
+        # per chunk pair
+        (m, l, acc), _ = tagged_scan(
+            "tagscan_attn_kv", jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), ks, vs), length=nk)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hk,G,cq,D)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, cq, h, dh)
+        return None, out.astype(q.dtype)
+
+    from ..launch.scan_registry import tagged_scan
+    _, outs = tagged_scan("tagscan_attn_q", jax.checkpoint(q_step), None,
+                          (jnp.arange(nq), qs), length=nq)
+    return jnp.swapaxes(outs, 0, 1).reshape(b, s, h, dh)
+
+
+def init_attention(store: ParamStore, cfg, name="attn"):
+    sub = store.subtree(name)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    sub.add("wq", (d, h * dh), ("fsdp", "tensor"))
+    sub.add("wk", (d, hk * dh), ("fsdp", "tensor"))
+    sub.add("wv", (d, hk * dh), ("fsdp", "tensor"))
+    sub.add("wo", (h * dh, d), ("tensor", "fsdp"))
+    if cfg.qk_norm:
+        sub.add("q_norm", (dh,), (None,), init="ones")
+        sub.add("k_norm", (dh,), (None,), init="ones")
+    return sub
+
+
+def run_attention(p, cfg, x, positions, *, window=None, use_flash=False,
+                  mrope_positions=None, chunked_threshold: int = 2048):
+    """Full-sequence attention (training / prefill).  Sequences longer than
+    ``chunked_threshold`` route through the online-softmax chunked path."""
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, hk, dh)
+    v = (x @ p["wv"]).reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if s > chunked_threshold:
+        out = attention_chunked(q, k, v, causal=cfg.causal, window=window)
+    else:
+        out = attention_scores(q, k, v, causal=cfg.causal, window=window,
+                               use_flash=use_flash)
+    return out.reshape(b, s, h * dh) @ p["wo"]
+
+
+def run_attention_decode(p, cfg, x, cache_k, cache_v, pos, *,
+                         window=None, mrope_positions=None):
+    """One decode step. x (B,1,d); cache_k/v (B,S,Hk,Dh) ring buffers;
+    ``pos`` is either (B,) per-sequence positions (continuous batching) or
+    a scalar (synchronized batch decode — enables an aliasing-friendly
+    dynamic-update-slice cache write instead of a scatter).
+
+    The sharded split-K path lives in distributed/decode.py; this is the
+    reference single-shard semantics (also used under shard_map per shard).
+    """
+    b, _, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = cache_k.shape[1]
+    uniform = jnp.ndim(pos) == 0
+    pos_vec = jnp.full((b,), pos) if uniform else pos
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k = (x @ p["wk"]).reshape(b, 1, hk, dh)
+    v = (x @ p["wv"]).reshape(b, 1, hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos_vec[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_vec[:, None], cfg.rope_theta)
+    if uniform:
+        slot = pos % s
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    else:
+        cache_k = jax.vmap(lambda c, i, u: c.at[i].set(u[0]))(
+            cache_k, pos_vec % s, k)
+        cache_v = jax.vmap(lambda c, i, u: c.at[i].set(u[0]))(
+            cache_v, pos_vec % s, v)
+    # Ring-buffer-aware validity: slot j holds absolute position
+    # pos - ((pos - j) mod S) (negative -> never written).  For the
+    # full-cache case (S > pos) this reduces to j <= pos.
+    kpos = jnp.arange(s)[None, :]                           # (1,S)
+    stored = pos_vec[:, None] - ((pos_vec[:, None] - kpos) % s)
+    valid = stored >= 0
+    if window is not None:
+        valid &= stored > pos_vec[:, None] - window
+    group = h // hk
+    qg = q.reshape(b, hk, group, dh)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / (dh ** 0.5)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(store: ParamStore, cfg, name="ffn"):
+    sub = store.subtree(name)
+    d, f = cfg.d_model, cfg.d_ff
+    sub.add("w_gate", (d, f), ("fsdp", "tensor"))
+    sub.add("w_up", (d, f), ("fsdp", "tensor"))
+    sub.add("w_down", (f, d), ("tensor", "fsdp"))
+    return sub
+
+
+def run_ffn(p, x):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel cross entropy
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask):
+    """logits (B,S,V) (V possibly sharded), labels (B,S) -> mean NLL."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,389 @@
+"""Model assembly: init / forward / train loss / decode for all families.
+
+Layers are grouped into *periods* (the repeating block pattern of the
+family — length 1 for dense/moe, (rglru, rglru, local) for hybrid,
+(mlstm, slstm) for ssm) and period parameters are stacked so the layer
+stack compiles as ONE ``lax.scan`` body (+ an unrolled remainder).  This
+keeps HLO size and compile time flat in depth — a requirement when
+dry-running 40 (arch × shape) cells.
+
+Activation-checkpointing (remat) wraps the scan body when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, layer_kinds
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import xlstm as XL
+from ..distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+def period_pattern(cfg: ModelConfig) -> list[str]:
+    kinds = layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        pat = list(cfg.block_pattern or ("rglru", "rglru", "local"))
+    elif cfg.family == "ssm":
+        pat = ["mlstm", "slstm"] if cfg.slstm_every == 2 else \
+            ["mlstm"] * (cfg.slstm_every - 1) + ["slstm"]
+    else:
+        pat = ["attn"]
+    assert kinds[:len(pat)] == pat
+    return pat
+
+
+def _moe_dispatch(cfg, p, h2):
+    """Route to the baseline gather MoE or the sequence-sharded a2a MoE
+    (beyond-paper §Perf) depending on cfg.moe_impl + mesh context."""
+    if cfg.moe_impl == "a2a":
+        from ..distributed.sharding import get_active
+        active = get_active()
+        if active is not None:
+            mesh, rules = active
+            from ..distributed.ep_a2a import make_run_moe_a2a
+            batch = rules.get("batch", ("pod", "data"))
+            batch = batch if isinstance(batch, tuple) else (batch,)
+            h2s = constrain(h2, ("batch", "tensor", None))
+            moe_fn = make_run_moe_a2a(
+                mesh, cfg, batch_axes=batch,
+                expert_axis=rules.get("expert", "model"),
+                fsdp_axis=rules.get("fsdp", "data"))
+            out, aux = moe_fn(p, h2s)
+            return constrain(out, ("batch", None, None)), aux
+    return MOE.run_moe(p, cfg, h2)
+
+
+def _init_block(cfg: ModelConfig, kind: str, key) -> tuple[dict, dict]:
+    store = L.ParamStore(key, jnp.dtype(cfg.dtype))
+    store.add("norm1", (cfg.d_model,), (None,), init="ones")
+    if kind in ("attn", "local"):
+        L.init_attention(store, cfg, "attn")
+        store.add("norm2", (cfg.d_model,), (None,), init="ones")
+        if cfg.is_moe:
+            MOE.init_moe(store, cfg, "moe")
+        elif cfg.d_ff > 0:
+            L.init_ffn(store, cfg, "ffn")
+    elif kind == "rglru":
+        RG.init_rglru(store, cfg, "rglru")
+        if cfg.d_ff > 0:
+            store.add("norm2", (cfg.d_model,), (None,), init="ones")
+            L.init_ffn(store, cfg, "ffn")
+    elif kind == "mlstm":
+        XL.init_mlstm(store, cfg, "mlstm")
+    elif kind == "slstm":
+        XL.init_slstm(store, cfg, "slstm")
+    else:
+        raise ValueError(kind)
+    return store.params, store.axes
+
+
+def _layout(cfg: ModelConfig) -> tuple:
+    """Canonical residual-stream sharding: sequence-parallel keeps it
+    seq-sharded over the tensor axis (Megatron-SP); default replicates."""
+    return (("batch", "tensor", None) if cfg.seq_parallel
+            else ("batch", None, None))
+
+
+def _run_block(cfg: ModelConfig, kind: str, p, x, positions, *,
+               mrope_positions=None, aux_acc=None):
+    """Pre-norm residual block; returns (x, aux_acc)."""
+    layout = _layout(cfg)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        if cfg.seq_parallel:
+            # gather the sequence only for attention; scatter right after
+            h = constrain(h, ("batch", None, None))
+        attn_out = L.run_attention(p["attn"], cfg, h, positions,
+                                   window=window,
+                                   mrope_positions=mrope_positions)
+        attn_out = constrain(attn_out, layout)
+        x = x + attn_out
+        x = constrain(x, layout)
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out, aux = _moe_dispatch(cfg, p["moe"], h2)
+            x = x + constrain(out, layout)
+            if aux_acc is not None:
+                aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        elif cfg.d_ff > 0:
+            x = x + L.run_ffn(p["ffn"], h2)
+    elif kind == "rglru":
+        out, _ = RG.run_rglru(p["rglru"], cfg, h)
+        x = x + out
+        if cfg.d_ff > 0:
+            x = x + L.run_ffn(p["ffn"],
+                              L.rms_norm(x, p["norm2"], cfg.norm_eps))
+    elif kind == "mlstm":
+        x = x + XL.run_mlstm(p["mlstm"], cfg, h)
+    elif kind == "slstm":
+        out, _ = XL.run_slstm(p["slstm"], cfg, h)
+        x = x + out
+    x = constrain(x, _layout(cfg))
+    return x, aux_acc
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) pytrees with period-stacked layers."""
+    kd, ke, ko = jax.random.split(key, 3)
+    pat = period_pattern(cfg)
+    n_full = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_full * len(pat)
+
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    estore = L.ParamStore(ke, jnp.dtype(cfg.dtype))
+    estore.add("embed", (cfg.vocab, cfg.d_model), ("vocab", "fsdp"),
+               scale=1.0)
+    estore.add("out_norm", (cfg.d_model,), (None,), init="ones")
+    if not cfg.tie_embeddings:
+        estore.add("lm_head", (cfg.d_model, cfg.vocab), ("fsdp", "vocab"))
+    params.update(estore.params)
+    axes.update(estore.axes)
+
+    # stacked periods: for each position in the pattern, stack n_full copies
+    stacked, stacked_axes = [], []
+    for pos, kind in enumerate(pat):
+        plist = []
+        ax = None
+        for i in range(n_full):
+            p, ax = _init_block(cfg, kind, jax.random.fold_in(kd, pos * 997 + i))
+            plist.append(p)
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+                       if n_full > 0 else {})
+        stacked_axes.append(jax.tree.map(lambda a: ("layers",) + tuple(a),
+                                         ax, is_leaf=lambda t: isinstance(t, tuple))
+                            if n_full > 0 else {})
+    params["periods"] = {str(i): s for i, s in enumerate(stacked)}
+    axes["periods"] = {str(i): s for i, s in enumerate(stacked_axes)}
+
+    tail, tail_axes = [], []
+    for i in range(n_tail):
+        p, ax = _init_block(cfg, pat[i], jax.random.fold_in(ko, i))
+        tail.append(p)
+        tail_axes.append(ax)
+    params["tail"] = tail
+    axes["tail"] = tail_axes
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeddings=None,
+            mrope_positions=None, collect_aux: bool = True):
+    """Returns (logits (B,S,V), aux dict)."""
+    if embeddings is not None:
+        x = embeddings.astype(jnp.dtype(cfg.dtype))
+        if tokens is not None:
+            tok_emb = params["embed"][tokens]
+            x = jnp.concatenate([x, tok_emb], axis=1)
+    else:
+        x = params["embed"][tokens]
+    x = constrain(x, _layout(cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pat = period_pattern(cfg)
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "drop_frac": jnp.zeros((), jnp.float32)} if cfg.is_moe else None
+
+    def period_body(carry, pparams):
+        x, aux = carry
+        for pos, kind in enumerate(pat):
+            x, aux = _run_block(cfg, kind, pparams[str(pos)], x, positions,
+                                mrope_positions=mrope_positions,
+                                aux_acc=aux)
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    n_full = cfg.n_layers // len(pat)
+    if n_full > 0:
+        from ..launch.scan_registry import tagged_scan
+        (x, aux), _ = tagged_scan("tagscan_layers_fwd", body, (x, aux),
+                                  params["periods"], length=n_full)
+    for i, p in enumerate(params["tail"]):
+        x, aux = _run_block(cfg, pat[i], p, x, positions,
+                            mrope_positions=mrope_positions, aux_acc=aux)
+
+    x = L.rms_norm(x, params["out_norm"], cfg.norm_eps)
+    x = constrain(x, ("batch", None, None))     # gather seq for the head
+    w_out = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    logits = x @ w_out
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, (aux or {})
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    """Next-token (or frame-classification, for encoder-only) loss."""
+    logits, aux = forward(
+        params, cfg, batch.get("tokens"),
+        embeddings=batch.get("embeddings"),
+        mrope_positions=batch.get("mrope_positions"))
+    labels = batch["labels"]
+    # align: for mixed vision+text inputs the label tensor covers the full
+    # concatenated sequence (vision positions masked out by `mask`).
+    loss = L.cross_entropy(logits, labels, batch["mask"])
+    total = loss
+    if aux:
+        total = total + aux.get("aux_loss", 0.0)
+    metrics = {"nll": loss}
+    metrics.update(aux)
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Per-layer cache pytree, period-stacked to mirror the param layout."""
+    pat = period_pattern(cfg)
+    n_full = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_full * len(pat)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(kind):
+        if kind == "attn":
+            shape = (batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if kind == "local":
+            w = min(cfg.local_window, max_seq)
+            shape = (batch, w, cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if kind == "rglru":
+            return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.conv1d_width - 1,
+                                       cfg.d_model), dt)}
+        if kind == "mlstm":
+            return XL.init_mlstm_state(cfg, batch)
+        if kind == "slstm":
+            return XL.init_slstm_state(cfg, batch)
+        raise ValueError(kind)
+
+    periods = {}
+    for pos, kind in enumerate(pat):
+        cache = one(kind)
+        periods[str(pos)] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_full,) + l.shape)
+            if n_full else l, cache)
+    tail = [one(pat[i]) for i in range(n_tail)]
+    return {"periods": periods, "tail": tail}
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Logical sharding axes mirroring init_decode_state.
+
+    KV caches shard the *sequence* dim over "kv_seq" (→ tensor axis): the
+    split-K decode layout (DESIGN.md §6) — kv-head counts (1–8) are below
+    the 16-way tensor axis so head-sharding cannot scale; recurrent states
+    shard channels over "tensor"."""
+    pat = period_pattern(cfg)
+    n_full = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_full * len(pat)
+    lead = ("layers",)
+
+    def one(kind, stacked: bool):
+        l = lead if stacked else ()
+        if kind in ("attn", "local"):
+            kv = l + ("batch", "kv_seq", None, None)
+            return {"k": kv, "v": kv}
+        if kind == "rglru":
+            return {"h": l + ("batch", "tensor"),
+                    "conv": l + ("batch", None, "tensor")}
+        if kind == "mlstm":
+            return {"C": l + ("batch", "tensor", None, None),
+                    "n": l + ("batch", "tensor", None),
+                    "m": l + ("batch", "tensor")}
+        if kind == "slstm":
+            ax = l + ("batch", "tensor")
+            return {"c": ax, "n": ax, "h": ax, "m": ax}
+        raise ValueError(kind)
+
+    periods = {str(i): one(k, n_full > 0) for i, k in enumerate(pat)}
+    tail = [one(pat[i], False) for i in range(n_tail)]
+    return {"periods": periods, "tail": tail}
+
+
+def _decode_block(cfg, kind, p, cache, x, pos):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        out, ck, cv = L.run_attention_decode(
+            p["attn"], cfg, h, cache["k"], cache["v"], pos, window=window)
+        cache = {"k": ck, "v": cv}
+        x = x + out
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out, _ = MOE.run_moe(p["moe"], cfg, h2)
+            x = x + out
+        elif cfg.d_ff > 0:
+            x = x + L.run_ffn(p["ffn"], h2)
+    elif kind == "rglru":
+        out, (hh, conv) = RG.run_rglru_decode(
+            p["rglru"], cfg, h, (cache["h"], cache["conv"]))
+        cache = {"h": hh, "conv": conv}
+        x = x + out
+        if cfg.d_ff > 0:
+            x = x + L.run_ffn(p["ffn"],
+                              L.rms_norm(x, p["norm2"], cfg.norm_eps))
+    elif kind == "mlstm":
+        out, cache = XL.run_mlstm_decode(p["mlstm"], cfg, h, cache)
+        x = x + out
+    elif kind == "slstm":
+        out, cache = XL.run_slstm_decode(p["slstm"], cfg, h, cache)
+        x = x + out
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, state, token, pos):
+    """One token for the whole stack.  token (B,1) int32; pos is (B,)
+    per-sequence positions or a scalar (synchronized batch decode).
+    Returns (logits (B,V), new_state)."""
+    x = params["embed"][token]
+    pat = period_pattern(cfg)
+    n_full = cfg.n_layers // len(pat)
+
+    def body(carry, scanned):
+        x = carry
+        pparams, pcache = scanned
+        new_caches = {}
+        for p_i, kind in enumerate(pat):
+            x, c = _decode_block(cfg, kind, pparams[str(p_i)],
+                                 pcache[str(p_i)], x, pos)
+            new_caches[str(p_i)] = c
+        return x, new_caches
+
+    if n_full > 0:
+        from ..launch.scan_registry import tagged_scan
+        x, new_periods = tagged_scan(
+            "tagscan_layers_dec", body, x,
+            (params["periods"], state["periods"]), length=n_full)
+    else:
+        new_periods = state["periods"]
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, c = _decode_block(cfg, pat[i], p, state["tail"][i], x, pos)
+        new_tail.append(c)
+
+    x = L.rms_norm(x, params["out_norm"], cfg.norm_eps)
+    w_out = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ w_out)[:, 0]
+    return logits, {"periods": new_periods, "tail": new_tail}

@@ -1,0 +1,121 @@
+"""Mixture-of-experts FFN with capacity-factor routing (GShard-style).
+
+Baseline dispatch (this file): sort-based — tokens are bucketed per expert
+up to capacity C by an argsort over expert assignments, gathered into an
+(E, C, d) tensor sharded over the ``expert``→"model" axis, pushed through
+per-expert SwiGLU (one batched einsum on the MXU), and combined back with
+the router weights.  Overflow tokens are dropped (recorded in aux stats) —
+the classic capacity trade-off; the paper-era alternative (dense one-hot
+dispatch) is O(N·E·C) memory and indefensible at LM scale.
+
+The shard_map all-to-all dispatch variant (beyond-paper §Perf candidate)
+lives in repro.distributed.ep_a2a.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamStore
+
+
+def init_moe(store: ParamStore, cfg, name="moe"):
+    sub = store.subtree(name)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sub.add("router", (d, e), ("fsdp", None), scale=d ** -0.5)
+    sub.add("w_gate", (e, d, f), ("expert", "fsdp", "tensor"))
+    sub.add("w_up", (e, d, f), ("expert", "fsdp", "tensor"))
+    sub.add("w_down", (e, f, d), ("expert", "tensor", "fsdp"))
+    return sub
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def run_moe(p, cfg, x):
+    """x (B, S, d) -> (B, S, d), aux dict with load-balance loss.
+
+    When cfg.moe_token_chunk is set and the batch is larger, tokens stream
+    through the experts in chunks (a tagged scan) so the (E, C, d_ff)
+    intermediates stay bounded — the prefill memory cap."""
+    b, s, d = x.shape
+    n = b * s
+    chunk = cfg.moe_token_chunk
+    if chunk and n > chunk and n % chunk == 0:
+        xc = x.reshape(n // chunk, 1, chunk, d)
+
+        def step(_, xi):
+            out, aux = _moe_tokens(p, cfg, xi)
+            return None, (out, aux)
+
+        from ..launch.scan_registry import tagged_scan
+        _, (outs, auxs) = tagged_scan("tagscan_moe_tokens", step, None, xc,
+                                      length=n // chunk)
+        out = outs.reshape(b, s, d)
+        aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+        return out, aux
+    return _moe_tokens_reshaped(p, cfg, x)
+
+
+def _moe_tokens_reshaped(p, cfg, x):
+    out, aux = _moe_tokens(p, cfg, x)
+    return out, aux
+
+
+def _moe_tokens(p, cfg, x):
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(n, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (N, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)        # renormalize
+
+    # --- load-balance auxiliary loss (Switch/GShard form) ---
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    aux_loss = e * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # --- sort-based capacity dispatch ---
+    cap = _capacity(n, cfg)
+    flat_e = top_e.reshape(-1)                               # (N*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)                 # group by expert
+    se, sp, stok = flat_e[order], flat_p[order], flat_tok[order]
+    # position of each assignment within its expert bucket
+    pos_in_e = jnp.arange(n * k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)     # overflow slot
+    # scatter token ids / weights into (E*C [+1 overflow],) buckets
+    tok_buf = jnp.full((e * cap + 1,), 0, jnp.int32).at[slot].set(
+        stok.astype(jnp.int32))
+    w_buf = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sp, 0.0))
+    valid_buf = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        keep.astype(jnp.float32))
+    tok_ec = tok_buf[:-1].reshape(e, cap)
+    w_ec = w_buf[:-1].reshape(e, cap)
+    valid_ec = valid_buf[:-1].reshape(e, cap)
+
+    xe = xf[tok_ec] * valid_ec[..., None].astype(x.dtype)    # (E, C, d)
+    # per-expert SwiGLU — batched over the (sharded) expert axis
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    down = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, p["w_down"])
+    down = down * (w_ec * valid_ec)[..., None].astype(x.dtype)
+
+    # combine: scatter-add back to tokens
+    out = jnp.zeros((n, d), down.dtype).at[tok_ec.reshape(-1)].add(
+        down.reshape(e * cap, d))
+    dropped = 1.0 - jnp.sum(valid_ec) / jnp.maximum(n * k, 1)
+    return out.reshape(b, s, d).astype(x.dtype), {
+        "aux_loss": aux_loss, "drop_frac": dropped}

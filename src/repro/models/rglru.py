@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The real-gated linear recurrent unit:
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = a^{c * r_t}            (a = sigmoid(Lambda), elementwise, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill runs the scan as an associative scan over the sequence
+(log-depth on TPU); decode keeps O(1) state per channel — which is what
+makes the 500k-token long-context cell *runnable* for this family.
+
+Block layout (Griffin): linear in-proj to (y, gate branch), short causal
+conv1d, RG-LRU, gated output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamStore
+
+
+def init_rglru(store: ParamStore, cfg, name="rglru"):
+    sub = store.subtree(name)
+    d = cfg.d_model
+    sub.add("w_in", (d, d), ("fsdp", "tensor"))
+    sub.add("w_gate_branch", (d, d), ("fsdp", "tensor"))
+    sub.add("conv_w", (cfg.conv1d_width, d), (None, "tensor"))
+    sub.add("conv_b", (d,), ("tensor",), init="zeros")
+    sub.add("w_a", (d, d), ("fsdp", "tensor"))
+    sub.add("w_i", (d, d), ("fsdp", "tensor"))
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999] (Griffin)
+    sub.add("lam", (d,), ("tensor",), init="ones", scale=1.0)
+    sub.add("w_out", (d, d), ("tensor", "fsdp"))
+    return sub
+
+
+def _gates(p, cfg, x):
+    """x (..., d) -> (log_a (..., d), gated_input (..., d))."""
+    r = jax.nn.sigmoid((x @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(8.0 * p["lam"].astype(jnp.float32))
+    log_a = cfg.rglru_c * r * log_a_base          # (..., d), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i \
+        * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def _causal_conv(p, cfg, x, state=None):
+    """Short depthwise causal conv. x (B,S,d). state (B,W-1,d) for decode."""
+    w = cfg.conv1d_width
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (w - 1,) + x.shape[2:], x.dtype)
+        xp = jnp.concatenate([pad, x], 1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], 1)
+    out = sum(xp[:, i:xp.shape[1] - (w - 1 - i)] * p["conv_w"][i]
+              for i in range(w))
+    return out + p["conv_b"], xp[:, -(w - 1):]
+
+
+def run_rglru(p, cfg, x, *, state=None):
+    """Full-sequence pass. x (B,S,d) -> (B,S,d).
+
+    ``state``: optional (h0 (B,d) f32, conv_state (B,W-1,d)) to resume."""
+    b, s, d = x.shape
+    gate_branch = jax.nn.gelu(x @ p["w_gate_branch"])
+    y = x @ p["w_in"]
+    h0 = None
+    conv_state = None
+    if state is not None:
+        h0, conv_state = state
+    y, conv_state = _causal_conv(p, cfg, y, conv_state)
+    log_a, gated = _gates(p, cfg, y)
+
+    # associative linear recurrence: h_t = exp(log_a_t) h_{t-1} + gated_t
+    def combine(c1, c2):
+        la1, u1 = c1
+        la2, u2 = c2
+        return la1 + la2, u1 * jnp.exp(la2) + u2
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+    la, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    out = (h.astype(x.dtype) * gate_branch) @ p["w_out"]
+    return out, (h[:, -1], conv_state)
+
+
+def run_rglru_decode(p, cfg, x, state):
+    """One token. x (B,1,d); state = (h (B,d) f32, conv (B,W-1,d))."""
+    h, conv_state = state
+    gate_branch = jax.nn.gelu(x @ p["w_gate_branch"])
+    y = x @ p["w_in"]
+    y, conv_state = _causal_conv(p, cfg, y, conv_state)
+    log_a, gated = _gates(p, cfg, y)
+    h_new = jnp.exp(log_a[:, 0]) * h + gated[:, 0]
+    out = (h_new[:, None].astype(x.dtype) * gate_branch) @ p["w_out"]
+    return out, (h_new, conv_state)

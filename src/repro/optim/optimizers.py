@@ -1,0 +1,72 @@
+"""Optimizers (explicit pytree states, fp32 moments over bf16 params).
+
+The optimizer *is* the UDA ``final`` function of the gradient aggregate
+(DESIGN.md §3): transition = microbatch grads, merge = psum, final = the
+update below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any          # first moment (fp32)
+    nu: Any          # second moment (fp32)
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(f32, params), jax.tree.map(f32, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        m_hat = m_new / (1 - b1 ** t)
+        v_hat = v_new / (1 - b2 ** t)
+        step = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), \
+            m_new, v_new
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(new_mu, new_nu, count)
+
+
+def sgdm_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgdm_update(grads, momentum, params, *, lr, beta=0.9):
+    new_m = jax.tree.map(
+        lambda m, g: beta * m + g.astype(jnp.float32), momentum, grads)
+    new_p = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_m)
+    return new_p, new_m
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm

@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, total_steps, final_frac=0.1):
+    t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (final_frac + (1 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr, warmup_steps, total_steps,
+                         final_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / jnp.maximum(warmup_steps, 1)
+    after = cosine_schedule(step - warmup_steps, base_lr=base_lr,
+                            total_steps=jnp.maximum(
+                                total_steps - warmup_steps, 1),
+                            final_frac=final_frac)
+    return jnp.where(s < warmup_steps, warm, after)

@@ -1,0 +1,5 @@
+from .trainer import TrainState, make_train_step, make_serve_step, \
+    init_train_state
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step",
+           "init_train_state"]

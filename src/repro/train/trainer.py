@@ -1,0 +1,166 @@
+"""Trainer: the LM train step as a MADlib SGD-UDA instance (DESIGN.md §3).
+
+The decomposition is literal:
+
+  transition — per-microbatch gradient of the sum-decomposable loss
+               (``jax.lax.scan`` over gradient-accumulation microbatches:
+               the blocked fold of core.aggregates, same contract)
+  merge      — the data/pod-axis psum XLA inserts from the shardings
+               (associative — the Figure-4 parallelism)
+  final      — optimizer update (AdamW = the "comparatively cheap final
+               function" of §4.1, k×k-scale work)
+
+The driver around it (launch/train.py) is a MADlib host driver: state
+stays donated on device, only scalar metrics cross per round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import adamw_init, adamw_update, clip_by_global_norm, \
+    linear_warmup_cosine
+from ..distributed.sharding import (DEFAULT_RULES, activation_sharding,
+                                    batch_sharding, param_sharding)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(cfg: ModelConfig, key) -> tuple[TrainState, dict]:
+    params, axes = M.init_model(cfg, key)
+    opt = adamw_init(params)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32)), axes
+
+
+def make_train_step(cfg: ModelConfig, *, base_lr=3e-4, warmup=100,
+                    total_steps=10_000, grad_clip=1.0,
+                    grad_accum: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return M.train_loss(params, cfg, batch)
+
+    def grad_transition(params, batch):
+        """UDA transition: gradient of one microbatch block."""
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if grad_accum == 1:
+            loss, metrics, grads = grad_transition(state.params, batch)
+        else:
+            # blocked fold over microbatches (transition + sum-merge).
+            # Keep the per-microbatch example axis on the batch mesh axes.
+            from ..distributed.sharding import constrain as _constrain
+
+            def split(x):
+                if x.shape[0] % grad_accum == 0:
+                    r = x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                  + x.shape[1:])
+                    return _constrain(r, (None, "batch")
+                                      + (None,) * (x.ndim - 1))
+                # batch axis is second (e.g. M-RoPE positions (3, B, S))
+                assert x.shape[1] % grad_accum == 0, x.shape
+                r = x.reshape(x.shape[:1]
+                              + (grad_accum, x.shape[1] // grad_accum)
+                              + x.shape[2:])
+                r = jnp.moveaxis(r, 1, 0)
+                return _constrain(r, (None, None, "batch")
+                                  + (None,) * (x.ndim - 2))
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def fold(acc, mb):
+                l_acc, g_acc = acc
+                l, mets, g = grad_transition(state.params, mb)
+                return (l_acc + l,
+                        jax.tree.map(lambda a, b_: a + b_, g_acc, g)), mets
+
+            from ..launch.scan_registry import tagged_scan
+            (loss, grads), metrics = tagged_scan(
+                "tagscan_grad_accum", fold, (jnp.zeros(()), zero), micro,
+                length=grad_accum)
+            loss = loss / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = linear_warmup_cosine(state.step, base_lr=base_lr,
+                                  warmup_steps=warmup,
+                                  total_steps=total_steps)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params,
+                                           lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step((params, cache), token, pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        return M.decode_step(params, cfg, cache, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded jit assembly
+# ---------------------------------------------------------------------------
+
+def shardings_for_state(state: TrainState, axes, mesh: Mesh,
+                        rules=None):
+    """NamedShardings for a TrainState: params + fp32 moments share the
+    parameter sharding; step is replicated."""
+    p_sh = param_sharding(axes, mesh, state.params, rules)
+    return TrainState(
+        params=p_sh,
+        opt=type(state.opt)(p_sh, p_sh,
+                            NamedSharding(mesh, P())),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def jit_train_step(train_step, state, axes, batch_spec, mesh,
+                   rules=None, donate=True):
+    """Wrap train_step in jit with explicit in/out shardings + the logical
+    activation-constraint context."""
+    rules = rules or DEFAULT_RULES
+    state_sh = shardings_for_state(state, axes, mesh, rules)
+    batch_sh = batch_sharding(mesh, batch_spec, rules)
+
+    def wrapped(s, b):
+        with activation_sharding(mesh, rules):
+            return train_step(s, b)
+
+    return jax.jit(
+        wrapped,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else (),
+    )

@@ -1,0 +1,179 @@
+"""Core UDA / driver / convex behaviour tests (single device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate, ConvexProgram, ProfileAggregate, Table,
+    conjugate_gradient, counted_driver, device_driver, gradient_descent,
+    host_driver, newton, relative_change, run_grouped, run_local,
+    run_sharded, run_stream, sgd, synthetic_classification_table,
+    synthetic_regression_table,
+)
+
+
+class LinregrAgg(Aggregate):
+    def init(self, block):
+        d = block["x"].shape[-1]
+        return {"xtx": jnp.zeros((d, d)), "xty": jnp.zeros((d,)),
+                "n": jnp.zeros(())}
+
+    def transition(self, state, block, mask):
+        x = block["x"] * mask[:, None]
+        y = block["y"] * mask
+        return {"xtx": state["xtx"] + x.T @ x,
+                "xty": state["xty"] + x.T @ y,
+                "n": state["n"] + mask.sum()}
+
+    def final(self, s):
+        return jnp.linalg.solve(
+            s["xtx"] + 1e-6 * jnp.eye(s["xtx"].shape[0]), s["xty"])
+
+
+@pytest.fixture(scope="module")
+def regr(key):
+    return synthetic_regression_table(key, 4096, 8)
+
+
+def test_table_basic(regr):
+    tbl, _ = regr
+    assert tbl.n_rows == 4096
+    assert tbl.column_names == ("x", "y")
+    t2, mask = tbl.pad_to(5000)
+    assert t2.n_rows == 5000 and int(mask.sum()) == 4096
+    assert tbl.select("x").column_names == ("x",)
+
+
+def test_table_ragged_rejected():
+    with pytest.raises(ValueError):
+        Table.from_columns({"a": jnp.zeros((4,)), "b": jnp.zeros((5,))})
+
+
+def test_uda_local_matches_closed_form(regr):
+    tbl, b = regr
+    coef = run_local(LinregrAgg(), tbl, block_size=256)
+    x, y = tbl["x"], tbl["y"]
+    ref = jnp.linalg.solve(x.T @ x + 1e-6 * jnp.eye(8), x.T @ y)
+    np.testing.assert_allclose(np.asarray(coef), np.asarray(ref), rtol=1e-4)
+    assert float(jnp.linalg.norm(coef - b)) < 0.05
+
+
+def test_uda_blocking_invariance(regr):
+    """Associativity contract: result independent of block partitioning."""
+    tbl, _ = regr
+    outs = [run_local(LinregrAgg(), tbl, block_size=bs)
+            for bs in (None, 64, 100, 1000, 4096)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_uda_stream_matches_local(regr):
+    tbl, _ = regr
+    local = run_local(LinregrAgg(), tbl)
+    stream = run_stream(
+        LinregrAgg(),
+        ({k: v[s:s + 512] for k, v in tbl.columns.items()}
+         for s in range(0, 4096, 512)))
+    np.testing.assert_allclose(np.asarray(local), np.asarray(stream),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_uda_sharded_1dev(regr, mesh1):
+    tbl, _ = regr
+    local = run_local(LinregrAgg(), tbl)
+    sharded = run_sharded(LinregrAgg(), tbl.distribute(mesh1), block_size=512)
+    np.testing.assert_allclose(np.asarray(local), np.asarray(sharded),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_uda_grouped(regr):
+    tbl, b = regr
+    g = (jnp.arange(4096) % 4).astype(jnp.int32)
+    tg = tbl.with_column("g", g)
+    coefs = run_grouped(LinregrAgg(), tg, "g", 4)
+    assert coefs.shape == (4, 8)
+    # every group estimates the same b
+    for i in range(4):
+        assert float(jnp.linalg.norm(coefs[i] - b)) < 0.12
+
+
+def test_profile_mixed_merges(regr, mesh1):
+    tbl, _ = regr
+    local = run_local(ProfileAggregate(), tbl)
+    sharded = run_sharded(ProfileAggregate(), tbl.distribute(mesh1),
+                          block_size=512)
+    for col in ("x", "y"):
+        for k in ("count", "mean", "std", "min", "max"):
+            np.testing.assert_allclose(
+                np.asarray(local[col][k]), np.asarray(sharded[col][k]),
+                rtol=1e-4, atol=1e-5)
+    assert float(local["y"]["count"]) == 4096.0
+
+
+def test_newton_logistic(key):
+    tbl, b = synthetic_classification_table(key, 8192, 6)
+
+    def logloss(params, block, mask):
+        z = block["x"] @ params
+        ll = jnp.where(block["y"] > 0.5, jax.nn.softplus(-z),
+                       jax.nn.softplus(z))
+        return jnp.sum(ll * mask)
+
+    prog = ConvexProgram(loss=logloss)
+    params, trace, conv = newton(prog, tbl, jnp.zeros(6), max_iters=30,
+                                 tol=1e-6)
+    assert conv
+    assert float(jnp.linalg.norm(params - b)) < 0.3
+    # loss monotone decreasing (convexity + Newton)
+    losses = [t[0] for t in trace]
+    assert losses == sorted(losses, reverse=True)
+
+
+def test_sgd_decreases_loss(key):
+    tbl, b = synthetic_classification_table(key, 4096, 6)
+
+    def logloss(params, block, mask):
+        z = block["x"] @ params
+        ll = jnp.where(block["y"] > 0.5, jax.nn.softplus(-z),
+                       jax.nn.softplus(z))
+        return jnp.sum(ll * mask)
+
+    prog = ConvexProgram(loss=logloss)
+    mask = jnp.ones((4096,), jnp.bool_)
+    l0 = float(logloss(jnp.zeros(6), tbl.columns, mask))
+    p = sgd(prog, tbl, jnp.zeros(6), stepsize=0.5, epochs=3, batch=128,
+            key=key)
+    l1 = float(logloss(p, tbl.columns, mask))
+    assert l1 < 0.7 * l0
+
+
+def test_conjugate_gradient(key):
+    a = jax.random.normal(key, (32, 32))
+    a = a @ a.T + 32 * jnp.eye(32)
+    b = jax.random.normal(key, (32,))
+    x, res, iters = conjugate_gradient(lambda v: a @ v, b, tol=1e-10)
+    np.testing.assert_allclose(np.asarray(a @ x), np.asarray(b), atol=1e-4)
+    assert int(iters) <= 64
+
+
+def test_host_and_device_driver_agree():
+    def step(s):
+        return {"x": 0.5 * s["x"] + 1.0}  # fixpoint x = 2
+
+    init = {"x": jnp.zeros(3)}
+    r_host = host_driver(step, init, metric=relative_change, tol=1e-6,
+                         max_iters=100)
+    r_dev = device_driver(step, init, metric=relative_change, tol=1e-6,
+                          max_iters=100)
+    assert r_host.converged and r_dev.converged
+    np.testing.assert_allclose(np.asarray(r_host.state["x"]), 2.0, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_dev.state["x"]), 2.0, rtol=1e-4)
+    assert abs(r_host.n_iters - r_dev.n_iters) <= 1
+
+
+def test_counted_driver():
+    out = counted_driver(lambda s: s + 1.0, jnp.zeros(()), 17)
+    assert float(out) == 17.0

@@ -1,0 +1,150 @@
+"""Per-kernel validation: Pallas body (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+# -- xtx ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(64, 4), (333, 7), (1000, 10), (2048, 128),
+                                 (1024, 320)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xtx_kernel(key, n, d, dtype):
+    from repro.kernels.xtx import ops, ref
+    kx, ky = jax.random.split(jax.random.fold_in(key, n * d))
+    x = jax.random.normal(kx, (n, d), dtype)
+    y = jax.random.normal(ky, (n,), dtype)
+    xtx, xty = ops.xtx_xty(x, y)
+    rxtx, rxty = ref.xtx_xty_ref(x, y)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(xtx), np.asarray(rxtx), rtol=rtol,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(xty), np.asarray(rxty), rtol=rtol,
+                               atol=1e-3)
+    assert xtx.dtype == jnp.float32  # f32 accumulation policy
+
+
+def test_xtx_kernel_symmetry(key):
+    from repro.kernels.xtx import ops
+    x = jax.random.normal(key, (512, 24))
+    xtx, _ = ops.xtx_xty(x, jnp.zeros(512))
+    np.testing.assert_allclose(np.asarray(xtx), np.asarray(xtx.T),
+                               rtol=1e-6)
+
+
+# -- kmeans_assign --------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,k", [(256, 2, 4), (777, 17, 9), (1024, 64, 32),
+                                   (100, 3, 5)])
+def test_kmeans_assign_kernel(key, n, d, k):
+    from repro.kernels.kmeans_assign import ops, ref
+    kx, kc, km = jax.random.split(jax.random.fold_in(key, n + d + k), 3)
+    x = jax.random.normal(kx, (n, d))
+    c = 2.0 * jax.random.normal(kc, (k, d))
+    m = (jax.random.uniform(km, (n,)) > 0.1).astype(jnp.float32)
+    a, mind, sums, counts = ops.assign_and_reduce(x, c, m)
+    ra, rmind, rsums, rcounts = ref.assign_and_reduce_ref(x, c, m)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(rmind),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+
+
+def test_kmeans_kernel_in_method(key):
+    """End-to-end: kmeans_fit(use_kernel=True) equals use_kernel=False."""
+    from repro.methods.kmeans import kmeans_fit
+    from repro.core import Table
+    pts = jax.random.normal(key, (512, 4))
+    tbl = Table.from_columns({"x": pts})
+    seed = jax.random.normal(jax.random.fold_in(key, 1), (3, 4))
+    a = kmeans_fit(tbl, 3, init_centroids=seed, max_iters=5)
+    b = kmeans_fit(tbl, 3, init_centroids=seed, max_iters=5,
+                   use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a.centroids),
+                               np.asarray(b.centroids), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -- countmin -------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,depth,width", [(256, 4, 256), (1000, 8, 1024),
+                                           (123, 2, 128)])
+def test_countmin_kernel(key, n, depth, width):
+    from repro.kernels.countmin import ops, ref
+    ki, km = jax.random.split(jax.random.fold_in(key, n))
+    items = jax.random.randint(ki, (n,), 0, 500)
+    mask = jax.random.uniform(km, (n,)) > 0.2
+    out = ops.countmin_block(items, mask, depth, width)
+    expect = ref.countmin_block_ref(items, mask, depth, width)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    assert int(out.sum()) == depth * int(mask.sum())
+
+
+# -- flash attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hk,s,d,causal", [
+    (1, 2, 1, 128, 64, True),
+    (2, 4, 2, 256, 64, True),
+    (1, 8, 1, 128, 128, False),
+    (1, 2, 2, 64, 32, True),
+    (1, 4, 4, 128, 64, True),   # MHA (group=1)
+])
+def test_flash_attention_kernel(key, b, hq, hk, s, d, causal):
+    from repro.kernels.flash_attention import ops, ref
+    kq, kk, kv = jax.random.split(jax.random.fold_in(key, s * hq + d), 3)
+    q = jax.random.normal(kq, (b, hq, s, d))
+    k = jax.random.normal(kk, (b, hk, s, d))
+    v = jax.random.normal(kv, (b, hk, s, d))
+    out = ops.flash_attention(q, k, v, causal=causal, tile_q=min(64, s),
+                              tile_k=min(64, s), force=True)
+    expect = ref.attention_ref(q, k, v, scale=1.0 / d ** 0.5, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_bf16(key):
+    from repro.kernels.flash_attention import ops, ref
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(kk, (1, 1, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(kv, (1, 1, 128, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, tile_q=64, tile_k=64, force=True)
+    expect = ref.attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), scale=1.0 / 8.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect), rtol=3e-2, atol=3e-2)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_flash_attention_causality(key):
+    """Future tokens must not influence outputs: perturb token t+1 …"""
+    from repro.kernels.flash_attention import ops
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, 64, 32))
+    k = jax.random.normal(kk, (1, 1, 64, 32))
+    v = jax.random.normal(kv, (1, 1, 64, 32))
+    base = ops.flash_attention(q, k, v, tile_q=32, tile_k=32, force=True)
+    k2 = k.at[:, :, 40:].add(10.0)
+    v2 = v.at[:, :, 40:].add(10.0)
+    pert = ops.flash_attention(q, k2, v2, tile_q=32, tile_k=32, force=True)
+    np.testing.assert_allclose(np.asarray(base[:, :, :40]),
+                               np.asarray(pert[:, :, :40]), rtol=1e-5,
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(base[:, :, 41:] - pert[:, :, 41:]))) > 1e-3
+
+
+def test_linregr_kernel_in_method(key):
+    """linregr(use_kernel=True) == linregr(use_kernel=False)."""
+    from repro.core import synthetic_regression_table
+    from repro.methods.linregr import linregr
+    tbl, _ = synthetic_regression_table(key, 2048, 12)
+    a = linregr(tbl)
+    b = linregr(tbl, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a.coef), np.asarray(b.coef),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,99 @@
+"""Statistical text analytics tests (§5.2, Table 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Table
+from repro.core.aggregates import run_local
+from repro.core.convex import sgd as sgd_solver
+
+
+@pytest.fixture(scope="module")
+def crf_setup(key):
+    from repro.methods.crf import crf_init_params, crf_program, \
+        extract_features
+    kk = jax.random.split(key, 4)
+    B, T, V, L, F = 64, 12, 30, 3, 64
+    toks = jax.random.randint(kk[0], (B, T), 0, V)
+    labels = (toks % L).astype(jnp.int32)
+    mask = jnp.ones((B, T), jnp.float32)
+    feats = extract_features(toks, F)
+    tbl = Table.from_columns({"feats": feats, "labels": labels,
+                              "mask": mask})
+    params = sgd_solver(crf_program(F, L, mu=1e-4), tbl,
+                        crf_init_params(F, L, kk[1]), stepsize=0.3,
+                        epochs=20, batch=16, key=kk[2], anneal=False)
+    return params, feats, labels, mask, kk[3]
+
+
+def test_crf_training_viterbi(crf_setup):
+    from repro.methods.crf import viterbi_decode
+    params, feats, labels, mask, _ = crf_setup
+    pred = viterbi_decode(params, feats, mask)
+    assert float(jnp.mean(pred == labels)) > 0.9
+
+
+def test_crf_loglik_increases_with_training(key, crf_setup):
+    from repro.methods.crf import crf_init_params, crf_log_likelihood
+    params, feats, labels, mask, _ = crf_setup
+    init = crf_init_params(64, 3, key)
+    ll_init = float(crf_log_likelihood(init, feats, labels, mask))
+    ll_trained = float(crf_log_likelihood(params, feats, labels, mask))
+    assert ll_trained > ll_init
+
+
+def test_viterbi_beats_or_matches_greedy(crf_setup):
+    from repro.methods.crf import crf_log_likelihood, emissions, \
+        viterbi_decode
+    params, feats, labels, mask, _ = crf_setup
+    vit = viterbi_decode(params, feats, mask)
+    greedy = jnp.argmax(emissions(params, feats), -1)
+    ll_vit = float(crf_log_likelihood(params, feats, vit, mask))
+    ll_greedy = float(crf_log_likelihood(params, feats, greedy, mask))
+    assert ll_vit >= ll_greedy - 1e-3  # max-product optimality
+
+
+def test_gibbs_inference(crf_setup):
+    from repro.methods.crf import gibbs_sample
+    params, feats, labels, mask, k = crf_setup
+    sampled, marginals = gibbs_sample(params, feats, mask, k, n_sweeps=20)
+    assert float(jnp.mean(sampled == labels)) > 0.75
+    np.testing.assert_allclose(np.asarray(jnp.sum(marginals, -1)), 1.0,
+                               atol=1e-4)
+
+
+def test_mh_inference(crf_setup):
+    from repro.methods.crf import mh_sample
+    params, feats, labels, mask, k = crf_setup
+    sampled, acc_rate = mh_sample(params, feats, mask, k, n_steps=300)
+    assert float(jnp.mean(sampled == labels)) > 0.6
+    assert 0.05 < float(acc_rate) < 0.95
+
+
+def test_string_match_trigram():
+    from repro.methods.string_match import (TrigramIndexAggregate,
+                                            approx_match, encode_strings)
+    corpus = ["tim tebow", "tom brady", "tim duncan", "peyton manning",
+              "tim tebow jr", "aaron rodgers"]
+    chars = encode_strings(corpus)
+    tbl = Table.from_columns({"chars": chars,
+                              "doc_id": jnp.arange(len(corpus))})
+    index = run_local(TrigramIndexAggregate(len(corpus), 512), tbl)
+    idx, scores = approx_match(index, "tim tebow", threshold=0.4)
+    matched = {corpus[i] for i in np.asarray(idx) if i >= 0}
+    assert matched == {"tim tebow", "tim tebow jr"}
+    assert float(scores[0]) == pytest.approx(1.0)   # exact match -> 1.0
+    assert float(scores[1]) < 0.1                    # unrelated -> ~0
+
+
+def test_feature_extraction_shapes(key):
+    from repro.methods.crf import extract_features
+    toks = jax.random.randint(key, (4, 9), 0, 100)
+    feats = extract_features(toks, 128)
+    assert feats.shape == (4, 9, 3)
+    assert int(jnp.max(feats)) < 128 and int(jnp.min(feats)) >= 0
+    dictionary = jnp.zeros((100,), jnp.int32).at[:50].set(1)
+    feats_d = extract_features(toks, 128, dictionary)
+    assert feats_d.shape == (4, 9, 4)
