@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
 REDUCED = ModelConfig(
     name="moonshot-v1-16b-a3b-reduced",
     family="moe",
-    n_layers=4,
+    n_layers=2,
     d_model=64,
     n_heads=4,
     n_kv_heads=4,

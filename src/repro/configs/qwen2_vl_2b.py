@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
 REDUCED = ModelConfig(
     name="qwen2-vl-2b-reduced",
     family="vlm",
-    n_layers=4,
+    n_layers=2,
     d_model=64,
     n_heads=4,
     n_kv_heads=2,

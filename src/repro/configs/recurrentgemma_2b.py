@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
 REDUCED = ModelConfig(
     name="recurrentgemma-2b-reduced",
     family="hybrid",
-    n_layers=6,
+    n_layers=3,
     d_model=64,
     n_heads=4,
     n_kv_heads=1,

@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
 REDUCED = ModelConfig(
     name="xlstm-350m-reduced",
     family="ssm",
-    n_layers=4,
+    n_layers=2,
     d_model=64,
     n_heads=4,
     n_kv_heads=4,

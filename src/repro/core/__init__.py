@@ -3,8 +3,21 @@
 - Table          — sharded pytree-of-columns (macro-programming substrate)
 - Aggregate      — the (init, transition, merge, final) UDA pattern
 - run_local / run_sharded / run_stream / run_grouped — execution engines
+- FusedAggregate / run_many — shared-scan execution: N heterogeneous
+  aggregates (mixed merge combinators, including generic-merge) packed
+  into one state pytree and folded in ONE data pass.  ``run_many`` picks
+  the engine (local vs sharded) from the table's sharding; use it whenever
+  several statistics are wanted from the same table — e.g. ``profile``
+  computes every column's summary AND every FM distinct-count in a single
+  scan.  Amortizing data movement across aggregates is the paper's §4.1
+  two-phase speedup argument applied one level up.
 - host_driver / device_driver / counted_driver — multipass iteration
 - ConvexProgram + solvers — the §5.1 model/solver decoupling
+
+Kernel hot paths are resolved through :mod:`repro.kernels.registry`: each
+kernel registers a (ref, pallas) implementation pair and call sites
+dispatch by name with backend/shape-aware selection (compiled Pallas on
+TPU, jnp reference elsewhere, interpret-mode Pallas on request).
 """
 
 from .table import (
@@ -14,11 +27,13 @@ from .table import (
 )
 from .aggregates import (
     Aggregate,
+    FusedAggregate,
     MERGE_MAX,
     MERGE_MIN,
     MERGE_SUM,
     run_grouped,
     run_local,
+    run_many,
     run_sharded,
     run_stream,
 )
@@ -42,8 +57,9 @@ from .convex import (
 from .templates import ProfileAggregate, map_columns, one_hot_encode
 
 __all__ = [
-    "Table", "Aggregate", "MERGE_SUM", "MERGE_MAX", "MERGE_MIN",
-    "run_local", "run_sharded", "run_stream", "run_grouped",
+    "Table", "Aggregate", "FusedAggregate", "MERGE_SUM", "MERGE_MAX",
+    "MERGE_MIN",
+    "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",
     "IterationResult", "host_driver", "device_driver", "counted_driver",
     "relative_change", "ConvexProgram", "GradientAggregate",
     "HessianAggregate", "gradient_descent", "sgd", "parallel_sgd", "newton",

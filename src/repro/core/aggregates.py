@@ -22,6 +22,13 @@ Execution engines provided here:
   state (the out-of-core path; §2.1's "entire data sets" argument).
 * :func:`run_grouped`     — GROUP BY execution for sum-decomposable
   aggregates via segment reduction (the paper's grouped linregr).
+
+Shared-scan composition: :class:`FusedAggregate` packs N heterogeneous
+aggregates (each with its own merge combinators, including generic-merge)
+into ONE state pytree, so any engine above executes all of them in a
+single data pass — the paper's ``profile`` trick (§Table 1: every
+column's statistics in one table scan) generalized to arbitrary UDA sets.
+:func:`run_many` is the convenience front-end.
 """
 
 from __future__ import annotations
@@ -35,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map as _compat_shard_map
 from .table import Table, Columns
 
 S = TypeVar("S")  # transition state pytree
@@ -92,7 +100,6 @@ class Aggregate:
         gathered = jax.tree.map(
             lambda x: jax.lax.all_gather(x, axes, tiled=False), state
         )
-        n = int(np.prod([jax.lax.axis_size(a) for a in axes])) if False else None
         # leading axis length is the product of the gathered axes
         lead = jax.tree.leaves(gathered)[0].shape[0]
         first = jax.tree.map(lambda x: x[0], gathered)
@@ -102,6 +109,72 @@ class Aggregate:
             return self.merge(acc, nxt)
 
         return jax.lax.fori_loop(1, lead, body, first)
+
+
+class FusedAggregate(Aggregate):
+    """Shared-scan combinator: N aggregates, ONE data pass.
+
+    The fused state is a tuple of the member states; ``transition`` feeds
+    the same block/mask to every member, so the engines above fold all of
+    them in a single ``lax.scan`` / one ``shard_map`` round instead of N
+    table scans.  ``merge``/``mesh_merge`` delegate member-wise, which
+    preserves each member's own combinators — sum-merge, min/max-merge and
+    generic (all-gather fold) members co-exist in one fused pass.
+
+    ``aggs`` may be a sequence (results come back as a tuple) or a mapping
+    (results come back as a dict keyed the same way).
+    """
+
+    merge_ops = None  # member-wise delegation; never consulted
+
+    def __init__(self, aggs):
+        if isinstance(aggs, Mapping):
+            self.names: tuple[str, ...] | None = tuple(aggs)
+            self.aggs: tuple[Aggregate, ...] = tuple(aggs[k] for k in self.names)
+        else:
+            self.names = None
+            self.aggs = tuple(aggs)
+        if not self.aggs:
+            raise ValueError("FusedAggregate needs at least one aggregate")
+
+    def init(self, block):
+        return tuple(a.init(block) for a in self.aggs)
+
+    def transition(self, state, block, mask):
+        return tuple(a.transition(s, block, mask)
+                     for a, s in zip(self.aggs, state))
+
+    def merge(self, a, b):
+        return tuple(agg.merge(sa, sb)
+                     for agg, sa, sb in zip(self.aggs, a, b))
+
+    def mesh_merge(self, state, axes):
+        return tuple(a.mesh_merge(s, axes)
+                     for a, s in zip(self.aggs, state))
+
+    def final(self, state):
+        outs = tuple(a.final(s) for a, s in zip(self.aggs, state))
+        if self.names is not None:
+            return dict(zip(self.names, outs))
+        return outs
+
+
+def run_many(aggs, table: Table, *, block_size: int | None = None,
+             mask: jax.Array | None = None, jit: bool = True) -> Any:
+    """Execute several aggregates over ``table`` in ONE shared scan.
+
+    Picks the sharded engine when the table is distributed, the local one
+    otherwise.  Returns a dict when ``aggs`` is a mapping, else a tuple,
+    ordered like the input.
+    """
+    fused = FusedAggregate(aggs)
+    if table.mesh is not None:
+        if mask is not None:
+            raise ValueError("run_many: mask is not supported on sharded "
+                             "tables (run_sharded folds whole shards); "
+                             "filter rows or use a local table")
+        return run_sharded(fused, table, block_size=block_size, jit=jit)
+    return run_local(fused, table, block_size=block_size, mask=mask, jit=jit)
 
 
 def _combine_leaf(op: str, a, b):
@@ -197,7 +270,7 @@ def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
         merged = agg.mesh_merge(local, row_axes)
         return agg.final(merged)
 
-    mapped = jax.shard_map(
+    mapped = _compat_shard_map(
         shard_fn, mesh=mesh, in_specs=(in_spec,),
         out_specs=P(),  # replicated result
         check_vma=False,

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .aggregates import Aggregate, MERGE_SUM, run_sharded, run_local
+from .compat import shard_map as _compat_shard_map
 from .table import Table, Columns
 
 
@@ -220,7 +221,7 @@ def parallel_sgd(program: ConvexProgram, table: Table, params0, *,
         # model averaging = one-round mean-merge UDA
         return jax.tree.map(lambda p: jax.lax.pmean(p, row_axes), params)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_compat_shard_map(
         shard_fn, mesh=mesh,
         in_specs=(in_spec, P(), P()),
         out_specs=P(), check_vma=False,

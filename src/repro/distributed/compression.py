@@ -20,6 +20,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..core.compat import axis_size
+
 
 def quantize_int8(x: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Stochastic rounding to int8 with a per-tensor scale."""
@@ -66,7 +68,7 @@ def compressed_psum(grads, error, key, axis: str):
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     e_leaves = treedef.flatten_up_to(error)
     keys = jax.random.split(key, len(leaves))
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     outs, new_es = [], []
     for g, e, k in zip(leaves, e_leaves, keys):
         corrected = g.astype(jnp.float32) + e

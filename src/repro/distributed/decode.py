@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core.compat import shard_map as _compat_shard_map
+
 
 def splitk_partial(q, k_shard, v_shard, valid_shard):
     """Per-shard partials.  q (B,Hk,G,Dh); k/v (B,Sl,Hk,Dh);
@@ -62,7 +64,7 @@ def make_splitk_decode_attention(mesh: Mesh, *, seq_axis: str = "model",
         out = splitk_combine(m, l, acc, seq_axis)
         return out.reshape(b, 1, h, dh).astype(q.dtype)
 
-    return jax.shard_map(
+    return _compat_shard_map(
         inner, mesh=mesh,
         in_specs=(P(batch_axes, None, None, None),
                   P(batch_axes, seq_axis, None, None),

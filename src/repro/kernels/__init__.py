@@ -6,6 +6,11 @@ Each kernel package has:
   ref.py    — pure-jnp oracle used by tests (tests/test_kernels.py sweeps
               shapes/dtypes and asserts allclose)
 
+Call sites do NOT import these packages directly: registry.py holds a
+named (ref, pallas) pair per kernel and ``dispatch(name, *args)`` applies
+the one backend/shape policy (compiled Pallas on TPU, jnp ref elsewhere,
+interpret-mode Pallas on request) for every method.
+
 Kernels:
   xtx            — blocked rank-TILE update accumulating X^T X and X^T y
                    (the paper's linregr hot spot, §4.4, MXU-adapted)

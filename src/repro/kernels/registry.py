@@ -1,0 +1,162 @@
+"""Kernel dispatch registry — one fast data path, many entry points.
+
+Every kernel package ships two interchangeable implementations: ``ref``
+(pure jnp, the test oracle, fast under plain XLA on any backend) and
+``pallas`` (the hand-tiled TPU kernel; its public wrapper falls back to
+interpret mode off-TPU, which validates the kernel body but is far too
+slow for throughput).  Before this module, every method hand-rolled its
+own inline import + backend test to choose between them; now call sites
+say ``dispatch("xtx", x, y)`` and the policy lives in exactly one place.
+
+Dispatch policy (``impl`` argument):
+
+* ``"auto"``    — compiled Pallas on TPU when the entry's ``supports``
+  predicate accepts the call, jnp reference everywhere else.  This is
+  what ``use_kernel=True`` in the method layer means.
+* ``"ref"``     — force the jnp oracle.
+* ``"pallas"``  — force the Pallas wrapper (interpret mode off-TPU; the
+  correctness path kernel tests pin).
+
+Built-in entries (registered lazily on first lookup, so importing this
+module never drags in kernel bodies): ``xtx``, ``kmeans_assign``,
+``countmin``, ``flash_attention``.  New kernels call :func:`register`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+IMPLS = ("auto", "ref", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """A named (ref, pallas) implementation pair.
+
+    ``supports(*args, **kwargs) -> bool`` gates shape/dtype combinations
+    the Pallas kernel cannot take; when it rejects, auto-dispatch degrades
+    to ``ref`` instead of erroring.
+    """
+
+    name: str
+    ref: Callable[..., Any]
+    pallas: Callable[..., Any] | None = None
+    supports: Callable[..., bool] | None = None
+
+    def pick(self, *args, **kwargs) -> str:
+        """Resolve "auto" for a concrete call: which impl would run?"""
+        if self.pallas is None:
+            return "ref"
+        if jax.default_backend() != "tpu":
+            return "ref"
+        if self.supports is not None and not self.supports(*args, **kwargs):
+            return "ref"
+        return "pallas"
+
+
+_REGISTRY: dict[str, KernelEntry] = {}
+_BUILTINS_LOADED = False
+
+
+def register(name: str, *, ref: Callable, pallas: Callable | None = None,
+             supports: Callable | None = None,
+             overwrite: bool = False) -> KernelEntry:
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"kernel {name!r} already registered")
+    entry = KernelEntry(name, ref, pallas, supports)
+    _REGISTRY[name] = entry
+    return entry
+
+
+def get(name: str) -> KernelEntry:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {available()}") from None
+
+
+def available() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def dispatch(name: str, *args, impl: str = "auto", **kwargs):
+    """Run kernel ``name`` on ``args`` under the dispatch policy above."""
+    entry = get(name)
+    if impl == "auto":
+        impl = entry.pick(*args, **kwargs)
+    if impl == "ref":
+        return entry.ref(*args, **kwargs)
+    if impl == "pallas":
+        if entry.pallas is None:
+            raise ValueError(f"kernel {name!r} has no pallas implementation")
+        return entry.pallas(*args, **kwargs)
+    raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+
+
+def resolve_impl(use_kernel: bool | str) -> str | None:
+    """Method-layer ``use_kernel`` flag -> dispatch impl (None = inline
+    jnp transition, no registry call)."""
+    if use_kernel is False:
+        return None
+    if use_kernel is True:
+        return "auto"
+    if use_kernel in IMPLS:
+        return use_kernel
+    raise ValueError(f"use_kernel must be bool or one of {IMPLS}, "
+                     f"got {use_kernel!r}")
+
+
+# ---------------------------------------------------------------------------
+# Built-in kernels.  Registration is deferred to first lookup: the ref
+# modules import the method layer (countmin's oracle shares the method
+# hash) and the method layer imports this module, so import-time
+# registration would cycle.
+# ---------------------------------------------------------------------------
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+
+    # overwrite=True + flag set at the END: if any import below raises,
+    # the next lookup retries the whole registration instead of leaving a
+    # permanently partial registry with misleading unknown-kernel errors.
+    from .xtx import ops as xtx_ops, ref as xtx_ref
+    register("xtx", ref=xtx_ref.xtx_xty_ref, pallas=xtx_ops.xtx_xty,
+             overwrite=True)
+
+    from .kmeans_assign import ops as ka_ops, ref as ka_ref
+    register("kmeans_assign", ref=ka_ref.assign_and_reduce_ref,
+             pallas=ka_ops.assign_and_reduce, overwrite=True)
+
+    from .countmin import ops as cm_ops, ref as cm_ref
+    register("countmin", ref=cm_ref.countmin_block_ref,
+             pallas=cm_ops.countmin_block, overwrite=True)
+
+    from .flash_attention import ops as fa_ops, ref as fa_ref
+
+    def flash_ref(q, k, v, *, causal=True, **_):
+        return fa_ref.attention_ref(
+            q, k, v, scale=1.0 / (q.shape[-1] ** 0.5), causal=causal)
+
+    def flash_pallas(q, k, v, *, causal=True, tile_q=256, tile_k=256):
+        # force=True so off-TPU requests genuinely run the Pallas body
+        # (interpret mode) instead of the wrapper's own jnp fallback.
+        s = q.shape[2]
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, tile_q=min(tile_q, s),
+            tile_k=min(tile_k, s), force=True)
+
+    def flash_supports(q, k, v, *, causal=True, tile_q=256, tile_k=256):
+        s = q.shape[2]
+        return s % min(tile_q, s) == 0 and s % min(tile_k, s) == 0
+
+    register("flash_attention", ref=flash_ref, pallas=flash_pallas,
+             supports=flash_supports, overwrite=True)
+    _BUILTINS_LOADED = True

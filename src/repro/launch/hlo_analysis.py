@@ -129,20 +129,36 @@ def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
     return 2.0 * out_n * k
 
 
-def _trip_count(op_name: str, registry: dict[str, int],
-                unknown: list) -> int:
+def _trip_count(op_name: str, registry: dict[str, int], unknown: list,
+                body_ops: "list[Op] | None" = None) -> int:
     """Innermost matching tag wins: a nested scan's op_name path contains
     every ancestor scope's tag too (e.g. layers_fwd/attn_q/attn_kv), and
-    this while's own trip count is the LAST tag on the path."""
+    this while's own trip count is the LAST tag on the path.
+
+    Fallback: some JAX versions emit the transposed (backward) scan's
+    while with no metadata at all, while the body instructions still
+    carry the full scope path (``transpose(jvp(tag_Ln))/...``).  When the
+    while itself doesn't match, attribute the OUTERMOST (leftmost) tag
+    found on any body instruction — body paths of a nested scan contain
+    the ancestor tag first, and the ancestor is this while."""
     best, best_pos = None, -1
     for tag, n in registry.items():
         pos = op_name.rfind(tag)
         if pos > best_pos:
             best, best_pos = n, pos
-    if best is None:
-        unknown.append(op_name or "<no-metadata>")
-        return 1
-    return best
+    if best is not None:
+        return best
+    if body_ops:
+        cand, cand_pos = None, None
+        for o in body_ops:
+            for tag, n in registry.items():
+                pos = o.op_name.find(tag)
+                if pos >= 0 and (cand_pos is None or pos < cand_pos):
+                    cand, cand_pos = n, pos
+        if cand is not None:
+            return cand
+    unknown.append(op_name or "<no-metadata>")
+    return 1
 
 
 # scan tags whose bodies execute inside the Pallas flash-attention kernel
@@ -228,7 +244,8 @@ def analyze(text: str, registry: dict[str, int], *,
         if op.kind == "while":
             mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
             mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
-            trip = _trip_count(op.op_name, registry, unknown_whiles)
+            trip = _trip_count(op.op_name, registry, unknown_whiles,
+                               comps.get(mb.group(1)) if mb else None)
             if mb:
                 out.append((mb.group(1), float(trip)))
             if mc:

@@ -9,22 +9,21 @@ from __future__ import annotations
 
 import jax
 
+from ..core.compat import make_mesh as _compat_make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host actually has — data-parallel only (used by the
     runnable examples; never 512-forced)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return _compat_make_mesh((n,), ("data",))
 
 
 # TPU v5e hardware constants (roofline denominators)

@@ -6,6 +6,12 @@ Descriptive:  sketches (count-min, Flajolet-Martin), quantiles, profile
 Support:      sparse_vector, array_ops, conjugate gradient (core.convex)
 Text (§5.2):  crf (features, Viterbi, MCMC), string_match (q-grams)
 SGD models (§5.1 Table 2): sgd_models
+
+Execution conventions: ``profile`` fuses all of its statistics into ONE
+data pass via ``core.aggregates.FusedAggregate`` / ``run_many``; methods
+with a Pallas hot loop (linregr, sketches, kmeans) take ``use_kernel``
+(True = backend-aware auto dispatch through ``kernels.registry``,
+"pallas"/"ref" force an implementation).
 """
 
 from . import (  # noqa: F401

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
 from ..core.table import Table
+from ..kernels.registry import dispatch, resolve_impl
 
 
 def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -48,10 +49,10 @@ class KMeansAggregate(Aggregate):
     merge_ops = MERGE_SUM
 
     def __init__(self, centroids: jax.Array, prev_centroids: jax.Array | None,
-                 use_kernel: bool = False):
+                 use_kernel: bool | str = False):
         self.centroids = centroids
         self.prev_centroids = prev_centroids
-        self.use_kernel = use_kernel
+        self.kernel_impl = resolve_impl(use_kernel)
 
     def init(self, block):
         k, d = self.centroids.shape
@@ -79,10 +80,10 @@ class KMeansAggregate(Aggregate):
             counts = jnp.sum(onehot, axis=0)
             moved = jnp.zeros((), x.dtype)
         else:
-            if self.use_kernel:
-                from ..kernels.kmeans_assign import ops as ka_ops
-                assign, mind, sums, counts = ka_ops.assign_and_reduce(
-                    x, self.centroids, m)
+            if self.kernel_impl is not None:
+                assign, mind, sums, counts = dispatch(
+                    "kmeans_assign", x, self.centroids, m,
+                    impl=self.kernel_impl)
             else:
                 d2 = _sq_dists(x, self.centroids)
                 assign = jnp.argmin(d2, axis=-1)
@@ -150,7 +151,8 @@ def kmeans_fit(table: Table, k: int, *, key: jax.Array | None = None,
                max_iters: int = 50, reassign_frac_tol: float = 0.0,
                variant: str = "fused", block_size: int | None = None,
                init_centroids: jax.Array | None = None,
-               use_kernel: bool = False, x_col: str = "x") -> KMeansResult:
+               use_kernel: bool | str = False, x_col: str = "x"
+               ) -> KMeansResult:
     """Lloyd's algorithm under a MADlib driver (§3.1.2 pattern)."""
     assert variant in ("fused", "two_pass")
     key = key if key is not None else jax.random.PRNGKey(0)

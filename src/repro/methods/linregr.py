@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
 from ..core.table import Table
+from ..kernels.registry import dispatch, resolve_impl
 
 
 @dataclasses.dataclass
@@ -32,13 +33,14 @@ class LinregrResult:
 
 class LinregrAggregate(Aggregate):
     """(init, transition, merge, final) for OLS.  ``use_kernel`` routes the
-    inner X^T X update through the Pallas kernel (TPU target; interpret
-    mode on CPU is exercised in kernel tests, not here)."""
+    inner X^T X update through the kernel registry: True = backend-aware
+    auto dispatch (compiled Pallas on TPU, jnp ref elsewhere); "pallas" /
+    "ref" force an implementation."""
 
     merge_ops = MERGE_SUM
 
-    def __init__(self, use_kernel: bool = False):
-        self.use_kernel = use_kernel
+    def __init__(self, use_kernel: bool | str = False):
+        self.kernel_impl = resolve_impl(use_kernel)
 
     def init(self, block):
         d = block["x"].shape[-1]
@@ -54,9 +56,8 @@ class LinregrAggregate(Aggregate):
     def transition(self, state, block, mask):
         x = block["x"] * mask[:, None].astype(block["x"].dtype)
         y = block["y"] * mask.astype(block["y"].dtype)
-        if self.use_kernel:
-            from ..kernels.xtx import ops as xtx_ops
-            xtx, xty = xtx_ops.xtx_xty(x, y)
+        if self.kernel_impl is not None:
+            xtx, xty = dispatch("xtx", x, y, impl=self.kernel_impl)
         else:
             # The paper's v0.3 lesson: express the rank-1 updates as one
             # rank-B update (k,B)@(B,k) — systolic-array native.
@@ -102,7 +103,7 @@ jax.tree_util.register_pytree_node(
 
 
 def linregr(table: Table, *, x_col: str = "x", y_col: str = "y",
-            block_size: int | None = None, use_kernel: bool = False
+            block_size: int | None = None, use_kernel: bool | str = False
             ) -> LinregrResult:
     """``SELECT (linregr(y, x)).* FROM data`` — sharded when the table is."""
     t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,

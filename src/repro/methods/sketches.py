@@ -8,7 +8,7 @@ Both are the canonical examples of why the UDA/merge contract matters:
 
 Hashing is a vectorized multiply-shift family (no data-dependent Python),
 so the transition compiles to pure gather/scatter-adds.  The Count-Min
-transition can be routed through kernels/countmin (Pallas).
+transition can be routed through the kernel registry ("countmin").
 """
 
 from __future__ import annotations
@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from ..core.aggregates import Aggregate, MERGE_MAX, MERGE_SUM, run_local, \
     run_sharded
 from ..core.table import Table
+from ..kernels.registry import dispatch, resolve_impl
 
 # multiply-shift hash constants (odd 64→32-bit multipliers per row)
 _PRIMES = jnp.array(
@@ -53,9 +54,9 @@ class CountMinAggregate(Aggregate):
     merge_ops = MERGE_SUM
 
     def __init__(self, depth: int = 4, width: int = 1024,
-                 use_kernel: bool = False, item_col: str = "item"):
+                 use_kernel: bool | str = False, item_col: str = "item"):
         self.depth, self.width = depth, width
-        self.use_kernel = use_kernel
+        self.kernel_impl = resolve_impl(use_kernel)
         self.item_col = item_col
 
     def init(self, block):
@@ -63,10 +64,9 @@ class CountMinAggregate(Aggregate):
 
     def transition(self, state, block, mask):
         items = block[self.item_col].astype(jnp.int32)
-        if self.use_kernel:
-            from ..kernels.countmin import ops as cm_ops
-            return state + cm_ops.countmin_block(
-                items, mask, self.depth, self.width)
+        if self.kernel_impl is not None:
+            return state + dispatch("countmin", items, mask, self.depth,
+                                    self.width, impl=self.kernel_impl)
         idx = _hash_rows(items, self.depth, self.width)  # (depth, n)
         upd = mask.astype(jnp.int32)
         def row(s, i):

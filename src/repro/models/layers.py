@@ -140,14 +140,15 @@ def attention_scores(q, k, v, *, causal: bool, window: int | None = None,
     """q (B,S,H,Dh), k/v (B,S,Hk,Dh) -> (B,S,H,Dh).
 
     ``window``: local (sliding) attention half-width in tokens.
-    ``use_flash``: route through the Pallas kernel (TPU hot path).
+    ``use_flash``: route through the kernel registry ("flash_attention":
+    compiled Pallas on TPU, jnp reference elsewhere).
     """
     b, s, h, dh = q.shape
     hk = k.shape[2]
     if use_flash and window is None:
-        from ..kernels.flash_attention.ops import flash_attention
-        out = flash_attention(
-            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+        from ..kernels.registry import dispatch
+        out = dispatch(
+            "flash_attention", jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
             jnp.moveaxis(v, 2, 1), causal=causal)
         return jnp.moveaxis(out, 1, 2)
     group = h // hk

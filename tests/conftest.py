@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core.compat import make_mesh
+
 
 @pytest.fixture(scope="session")
 def key():
@@ -14,5 +16,4 @@ def key():
 @pytest.fixture(scope="session")
 def mesh1():
     """A 1-device data mesh (the sharded code paths, minus real parallelism)."""
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), ("data",))

@@ -33,6 +33,7 @@ def _smoke_batch(cfg, key, b=2, s=16):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_arch_smoke_forward_and_train_step(arch, key):
     cfg = reduced_config(arch)
@@ -73,6 +74,7 @@ def test_arch_smoke_decode_step(arch, key):
     assert jax.tree.structure(state) == jax.tree.structure(new_state)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-8b", "recurrentgemma-2b",
                                   "xlstm-350m", "stablelm-1.6b"])
 def test_decode_matches_forward(arch, key):

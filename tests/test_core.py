@@ -147,7 +147,12 @@ def test_sgd_decreases_loss(key):
     p = sgd(prog, tbl, jnp.zeros(6), stepsize=0.5, epochs=3, batch=128,
             key=key)
     l1 = float(logloss(p, tbl.columns, mask))
-    assert l1 < 0.7 * l0
+    # judge against the attainable optimum, not a fixed fraction of l0
+    # (the dataset's Bayes loss depends on the RNG draw): SGD must close
+    # >= 95% of the gap between the zero-params loss and Newton's optimum.
+    popt, _, _ = newton(prog, tbl, jnp.zeros(6), max_iters=30, tol=1e-8)
+    lopt = float(logloss(popt, tbl.columns, mask))
+    assert (l0 - l1) > 0.95 * (l0 - lopt), (l0, l1, lopt)
 
 
 def test_conjugate_gradient(key):
@@ -177,3 +182,65 @@ def test_host_and_device_driver_agree():
 def test_counted_driver():
     out = counted_driver(lambda s: s + 1.0, jnp.zeros(()), 17)
     assert float(out) == 17.0
+
+
+# -- engine edge cases --------------------------------------------------------
+
+def test_grouped_empty_group(regr):
+    """A group id with no rows must yield an empty-state result, not NaNs."""
+    tbl, _ = regr
+    g = (jnp.arange(4096) % 4).astype(jnp.int32)
+    g = jnp.where(g == 2, 3, g)          # group 2 has zero rows
+    out = run_grouped(ProfileAggregate(), tbl.with_column("g", g), "g", 4)
+    counts = np.asarray(out["y"]["count"])
+    np.testing.assert_array_equal(counts, [1024.0, 1024.0, 0.0, 2048.0])
+    assert np.all(np.isfinite(np.asarray(out["y"]["mean"])))
+    assert np.all(np.isfinite(np.asarray(out["y"]["std"])))
+
+
+def test_grouped_non_contiguous_ids(regr):
+    """Sparse/non-contiguous group ids: untouched slots stay empty."""
+    tbl, _ = regr
+    ids = jnp.asarray([0, 3, 7], jnp.int32)
+    g = ids[jnp.arange(4096) % 3]
+    out = run_grouped(ProfileAggregate(), tbl.with_column("g", g), "g", 8)
+    counts = np.asarray(out["y"]["count"])
+    expect = np.zeros(8)
+    expect[[0, 3, 7]] = np.bincount(np.arange(4096) % 3)
+    np.testing.assert_array_equal(counts, expect)
+    # per-group sums add up to the ungrouped total
+    total = run_local(ProfileAggregate(), tbl)["y"]["sum"]
+    np.testing.assert_allclose(np.asarray(out["y"]["sum"]).sum(),
+                               np.asarray(total), rtol=1e-5)
+
+
+def test_stream_single_block(regr):
+    tbl, _ = regr
+    local = run_local(LinregrAgg(), tbl)
+    stream = run_stream(LinregrAgg(), iter([dict(tbl.columns)]))
+    np.testing.assert_allclose(np.asarray(local), np.asarray(stream),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_stream_non_divisible_blocks(regr):
+    """4096 rows in 600-row blocks: the ragged 496-row tail must fold in."""
+    tbl, _ = regr
+    local = run_local(LinregrAgg(), tbl)
+    stream = run_stream(LinregrAgg(),
+                        (dict(b.columns) for b in tbl.blocks(600)))
+    np.testing.assert_allclose(np.asarray(local), np.asarray(stream),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_local_all_false_mask(regr):
+    """An all-masked input is an empty table: zero counts, finite stats."""
+    tbl, _ = regr
+    mask = jnp.zeros((4096,), jnp.bool_)
+    out = run_local(ProfileAggregate(), tbl, mask=mask)
+    for col in ("x", "y"):
+        assert float(out[col]["count"]) == 0.0
+        assert np.all(np.asarray(out[col]["sum"]) == 0.0)
+        assert np.all(np.isfinite(np.asarray(out[col]["mean"])))
+        assert np.all(np.isfinite(np.asarray(out[col]["std"])))
+    lin = run_local(LinregrAgg(), tbl, mask=mask)
+    assert np.all(np.isfinite(np.asarray(lin)))

@@ -150,8 +150,8 @@ def test_splitk_decode_matches_reference(key, mesh1):
     ck = jax.random.normal(kk, (b, s, hk, dh))
     cv = jax.random.normal(kv, (b, s, hk, dh))
     pos = jnp.array([7, 20], jnp.int32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     attn = make_splitk_decode_attention(mesh, batch_axes=("data",))
     out = attn(q, ck, cv, pos)
     # reference: masked softmax attention

@@ -1,0 +1,170 @@
+"""Shared-scan (FusedAggregate / run_many) correctness.
+
+The contract: fusing N aggregates into one data pass changes the number
+of table scans and NOTHING else — every member must produce exactly what
+it produces when run alone, on every engine.  Sweeps all pairings of the
+four heterogeneous aggregates (mixed-merge Profile, sum-merge CountMin,
+max-merge FM, pytree-state Gradient) over the local, sharded-on-mesh1 and
+grouped paths, plus the profile() single-pass acceptance check.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConvexProgram, FusedAggregate, GradientAggregate, ProfileAggregate,
+    Table, run_grouped, run_local, run_many, run_sharded,
+)
+from repro.methods.sketches import CountMinAggregate, FMAggregate
+
+N, D, GROUPS = 512, 3, 4
+
+
+@pytest.fixture(scope="module")
+def table(key):
+    kx, ky, ki = jax.random.split(key, 3)
+    return Table.from_columns({
+        "x": jax.random.normal(kx, (N, D)),
+        "y": jax.random.normal(ky, (N,)),
+        "item": jax.random.randint(ki, (N,), 0, 100),
+        "g": (jnp.arange(N) % GROUPS).astype(jnp.int32),
+    })
+
+
+_PROGRAM = ConvexProgram(
+    loss=lambda p, block, mask: jnp.sum(
+        (block["x"] @ p - block["y"]) ** 2 * mask))
+
+AGG_FACTORIES = {
+    "profile": lambda: ProfileAggregate(),
+    "countmin": lambda: CountMinAggregate(depth=4, width=256,
+                                          item_col="item"),
+    "fm": lambda: FMAggregate(num_hashes=4, bits=16, item_col="item"),
+    "gradient": lambda: GradientAggregate(_PROGRAM, jnp.zeros((D,))),
+}
+PAIRINGS = list(itertools.combinations(AGG_FACTORIES, 2))
+
+
+def _assert_trees_equal(fused, solo, rtol=1e-6, atol=1e-6):
+    la, lb = jax.tree.leaves(fused), jax.tree.leaves(solo)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("pair", PAIRINGS, ids=lambda p: "+".join(p))
+def test_fused_matches_solo_local(table, pair):
+    fused = run_many({name: AGG_FACTORIES[name]() for name in pair}, table,
+                     block_size=128)
+    for name in pair:
+        solo = run_local(AGG_FACTORIES[name](), table, block_size=128)
+        _assert_trees_equal(fused[name], solo)
+
+
+@pytest.mark.parametrize("pair", PAIRINGS, ids=lambda p: "+".join(p))
+def test_fused_matches_solo_sharded(table, pair, mesh1):
+    dist = table.distribute(mesh1)
+    fused = run_many({name: AGG_FACTORIES[name]() for name in pair}, dist,
+                     block_size=128)
+    for name in pair:
+        solo = run_sharded(AGG_FACTORIES[name](), dist, block_size=128)
+        _assert_trees_equal(fused[name], solo)
+
+
+@pytest.mark.parametrize("pair", PAIRINGS, ids=lambda p: "+".join(p))
+def test_fused_matches_solo_grouped(table, pair):
+    fused = run_grouped(
+        FusedAggregate({name: AGG_FACTORIES[name]() for name in pair}),
+        table, "g", GROUPS)
+    for name in pair:
+        solo = run_grouped(AGG_FACTORIES[name](), table, "g", GROUPS)
+        _assert_trees_equal(fused[name], solo)
+
+
+def test_fused_stream_ragged_blocks(table):
+    """Fused aggregates also compose with the out-of-core engine."""
+    from repro.core import run_stream
+    fused = FusedAggregate({"profile": ProfileAggregate(),
+                            "fm": FMAggregate(item_col="item")})
+    out = run_stream(fused, (dict(b.columns) for b in table.blocks(100)))
+    # looser tolerance: the stream folds blockwise, so fp32 sums
+    # accumulate in a different order than the one-shot transition
+    _assert_trees_equal(out["profile"],
+                        run_local(ProfileAggregate(), table),
+                        rtol=1e-4, atol=1e-5)
+    _assert_trees_equal(out["fm"],
+                        run_local(FMAggregate(item_col="item"), table),
+                        rtol=1e-4, atol=1e-5)
+
+
+def test_run_many_sequence_returns_tuple(table):
+    out = run_many([ProfileAggregate(), FMAggregate(item_col="item")], table)
+    assert isinstance(out, tuple) and len(out) == 2
+    assert float(out[0]["y"]["count"]) == N
+
+
+def test_fused_all_four_at_once(table):
+    fused = run_many({name: f() for name, f in AGG_FACTORIES.items()}, table)
+    for name, factory in AGG_FACTORIES.items():
+        _assert_trees_equal(fused[name], run_local(factory(), table))
+
+
+def test_fused_empty_rejected():
+    with pytest.raises(ValueError):
+        FusedAggregate([])
+
+
+def test_run_many_rejects_mask_on_sharded_table(table, mesh1):
+    with pytest.raises(ValueError, match="mask"):
+        run_many([ProfileAggregate()], table.distribute(mesh1),
+                 mask=jnp.ones((N,), jnp.bool_))
+
+
+# -- the profile() acceptance criterion ---------------------------------------
+
+class _CountingFused(FusedAggregate):
+    """Counts top-level transition invocations (= data passes executed)."""
+
+    passes = 0
+
+    def transition(self, state, block, mask):
+        _CountingFused.passes += 1
+        return super().transition(state, block, mask)
+
+
+def test_profile_distinct_counts_single_pass(key, monkeypatch):
+    """profile(distinct_counts=True) = ONE fused scan, same numbers as the
+    sequential scan-per-aggregate baseline."""
+    from repro.methods import profile as profile_mod
+    from repro.methods.sketches import fm_distinct_count
+
+    cols = {
+        "a": jax.random.normal(key, (4096,)),
+        "b": jax.random.randint(jax.random.fold_in(key, 1), (4096,), 0, 300),
+        "c": jax.random.randint(jax.random.fold_in(key, 2), (4096,), 0, 7),
+    }
+    tbl = Table.from_columns(cols)
+
+    monkeypatch.setattr(profile_mod, "FusedAggregate", _CountingFused)
+    _CountingFused.passes = 0
+    out = profile_mod.profile(tbl, distinct_counts=True)
+    assert _CountingFused.passes == 1, (
+        f"profile executed {_CountingFused.passes} data passes, wanted 1")
+
+    # sequential oracle: separate scans, pre-refactor dataflow
+    stats = run_local(ProfileAggregate(), tbl)
+    for name in cols:
+        for k in ("count", "mean", "std", "min", "max"):
+            np.testing.assert_allclose(
+                np.asarray(out[name][k]), np.asarray(stats[name][k]),
+                rtol=1e-6, atol=1e-6)
+    for name in ("b", "c"):
+        solo = fm_distinct_count(Table.from_columns({"item": cols[name]}))
+        np.testing.assert_allclose(np.asarray(out[name]["approx_distinct"]),
+                                   np.asarray(solo), rtol=1e-6)
+    assert "approx_distinct" not in out["a"]

@@ -1,10 +1,77 @@
 """Per-kernel validation: Pallas body (interpret mode) vs pure-jnp oracle,
-swept over shapes and dtypes."""
+swept over shapes and dtypes, plus the dispatch registry every method
+call site routes through."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+
+# -- dispatch registry --------------------------------------------------------
+
+def test_registry_lists_builtin_kernels():
+    from repro.kernels import registry
+    assert set(registry.available()) >= {
+        "xtx", "kmeans_assign", "countmin", "flash_attention"}
+
+
+def test_registry_auto_falls_back_to_ref_off_tpu(key):
+    from repro.kernels import registry
+    x = jax.random.normal(key, (256, 8))
+    y = jax.random.normal(key, (256,))
+    entry = registry.get("xtx")
+    if jax.default_backend() != "tpu":
+        assert entry.pick(x, y) == "ref"
+    out = registry.dispatch("xtx", x, y)
+    ref = registry.dispatch("xtx", x, y, impl="ref")
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_registry_pallas_impl_matches_ref(key):
+    """impl="pallas" always runs the kernel body (interpret off-TPU)."""
+    from repro.kernels import registry
+    items = jax.random.randint(key, (333,), 0, 400)
+    mask = jax.random.uniform(jax.random.fold_in(key, 1), (333,)) > 0.3
+    a = registry.dispatch("countmin", items, mask, 4, 128, impl="pallas")
+    b = registry.dispatch("countmin", items, mask, 4, 128, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_registry_unknown_kernel_and_duplicate():
+    from repro.kernels import registry
+    with pytest.raises(KeyError):
+        registry.get("no_such_kernel")
+    with pytest.raises(ValueError):
+        registry.dispatch("xtx", impl="bogus")
+    with pytest.raises(ValueError):
+        registry.register("xtx", ref=lambda: None)
+    # explicit overwrite is allowed and undone to keep the session clean
+    orig = registry.get("xtx")
+    registry.register("xtx", ref=orig.ref, pallas=orig.pallas,
+                      overwrite=True)
+
+
+def test_registry_resolve_impl():
+    from repro.kernels.registry import resolve_impl
+    assert resolve_impl(False) is None
+    assert resolve_impl(True) == "auto"
+    assert resolve_impl("pallas") == "pallas"
+    assert resolve_impl("ref") == "ref"
+    with pytest.raises(ValueError):
+        resolve_impl("mxu")
+
+
+def test_registry_flash_supports_gates_ragged_seq(key):
+    from repro.kernels import registry
+    entry = registry.get("flash_attention")
+    q = jax.random.normal(key, (1, 2, 96, 32))
+    k = jax.random.normal(key, (1, 1, 96, 32))
+    # 96 % 64 != 0 -> the Pallas tiling can't take it; auto must pick ref
+    assert not entry.supports(q, k, k, tile_q=64, tile_k=64)
+    assert entry.pick(q, k, k, tile_q=64, tile_k=64) == "ref"
+    assert entry.supports(q, k, k, tile_q=32, tile_k=32)
 
 
 # -- xtx ----------------------------------------------------------------------
@@ -55,8 +122,11 @@ def test_kmeans_assign_kernel(key, n, d, k):
     np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
 
 
-def test_kmeans_kernel_in_method(key):
-    """End-to-end: kmeans_fit(use_kernel=True) equals use_kernel=False."""
+@pytest.mark.parametrize("use_kernel", [True, "pallas"])
+def test_kmeans_kernel_in_method(key, use_kernel):
+    """End-to-end: registry-dispatched kmeans_fit equals the inline path
+    (True = auto dispatch; "pallas" pins the kernel body, interpret mode
+    off-TPU)."""
     from repro.methods.kmeans import kmeans_fit
     from repro.core import Table
     pts = jax.random.normal(key, (512, 4))
@@ -64,7 +134,7 @@ def test_kmeans_kernel_in_method(key):
     seed = jax.random.normal(jax.random.fold_in(key, 1), (3, 4))
     a = kmeans_fit(tbl, 3, init_centroids=seed, max_iters=5)
     b = kmeans_fit(tbl, 3, init_centroids=seed, max_iters=5,
-                   use_kernel=True)
+                   use_kernel=use_kernel)
     np.testing.assert_allclose(np.asarray(a.centroids),
                                np.asarray(b.centroids), rtol=1e-4,
                                atol=1e-4)
@@ -139,12 +209,13 @@ def test_flash_attention_causality(key):
     assert float(jnp.max(jnp.abs(base[:, :, 41:] - pert[:, :, 41:]))) > 1e-3
 
 
-def test_linregr_kernel_in_method(key):
-    """linregr(use_kernel=True) == linregr(use_kernel=False)."""
+@pytest.mark.parametrize("use_kernel", [True, "pallas"])
+def test_linregr_kernel_in_method(key, use_kernel):
+    """Registry-dispatched linregr == inline-transition linregr."""
     from repro.core import synthetic_regression_table
     from repro.methods.linregr import linregr
     tbl, _ = synthetic_regression_table(key, 2048, 12)
     a = linregr(tbl)
-    b = linregr(tbl, use_kernel=True)
+    b = linregr(tbl, use_kernel=use_kernel)
     np.testing.assert_allclose(np.asarray(a.coef), np.asarray(b.coef),
                                rtol=1e-4, atol=1e-5)

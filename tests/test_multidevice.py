@@ -14,6 +14,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-per-test, 8 forced host devices
+
 ENV = dict(os.environ,
            XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH="src")
@@ -35,8 +37,8 @@ def test_sharded_uda_8dev():
             synthetic_regression_table
         from repro.methods.linregr import LinregrAggregate
         tbl, _ = synthetic_regression_table(jax.random.PRNGKey(0), 8192, 16)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         local = run_local(LinregrAggregate(), tbl)
         sharded = run_sharded(LinregrAggregate(), tbl.distribute(mesh),
                               block_size=256)
@@ -53,8 +55,8 @@ def test_splitk_decode_seq_sharded_8dev():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.distributed.decode import make_splitk_decode_attention
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         b, h, hk, s, dh = 4, 8, 1, 64, 32     # MQA: kv=1 (the hard case)
         k = jax.random.PRNGKey(0)
         q = jax.random.normal(k, (b, 1, h, dh))
@@ -86,8 +88,8 @@ def test_compressed_psum_8dev():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum, \\
             init_error_feedback
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((8,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024))
 
         def body(g_shard, key):
@@ -96,7 +98,8 @@ def test_compressed_psum_8dev():
             out, new_e = compressed_psum(grads, err, key, "pod")
             return out["w"]
 
-        fn = jax.jit(jax.shard_map(
+        from repro.core.compat import shard_map
+        fn = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(P("pod"), P()), out_specs=P("pod"),
             check_vma=False))
         keys = jax.random.PRNGKey(1)
@@ -120,8 +123,8 @@ def test_sharded_train_step_8dev():
                                          make_train_step)
         from repro.distributed.sharding import DEFAULT_RULES
         cfg = reduced_config("qwen3-8b")
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         state, axes = init_train_state(cfg, jax.random.PRNGKey(0))
         step = make_train_step(cfg, base_lr=1e-2, warmup=1, total_steps=50)
         batch = synthetic_batch(cfg, 8, 16, jax.random.PRNGKey(1))

@@ -24,8 +24,8 @@ def test_gpipe_matches_sequential():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import make_pipeline
-        mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((4, 2), ("pod", "model"))
         S, M, mb, d = 4, 8, 2, 16
         key = jax.random.PRNGKey(0)
         Ws = jax.random.normal(key, (S, d, d)) * 0.3
