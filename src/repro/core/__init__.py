@@ -11,7 +11,15 @@
   computes every column's summary AND every FM distinct-count in a single
   scan.  Amortizing data movement across aggregates is the paper's §4.1
   two-phase speedup argument applied one level up.
-- host_driver / device_driver / counted_driver — multipass iteration
+- IterativeTask + fit / fit_grouped / fit_stream — the unified iterative
+  executor (§3.1.2 driver pattern, Bismarck-style): ONE controller loop
+  runs any registered task on all four engines, with a compiled
+  ``lax.while_loop``/``scan`` fast path, warm starts, and per-group
+  (GROUP BY) model fitting.  logregr / linregr / kmeans / lda and the
+  convex solvers are all tasks; new iterative methods must register a
+  task instead of hand-rolling a convergence loop.
+- host_driver / device_driver / counted_driver — step-function iteration
+  (no table scan), delegating to the executor's loop engines
 - ConvexProgram + solvers — the §5.1 model/solver decoupling
 
 Kernel hot paths are resolved through :mod:`repro.kernels.registry`: each
@@ -37,12 +45,19 @@ from .aggregates import (
     run_sharded,
     run_stream,
 )
+from .iterative import (
+    FitResult,
+    IterativeTask,
+    fit,
+    fit_grouped,
+    fit_stream,
+    relative_change,
+)
 from .driver import (
     IterationResult,
     counted_driver,
     device_driver,
     host_driver,
-    relative_change,
 )
 from .convex import (
     ConvexProgram,
@@ -60,6 +75,7 @@ __all__ = [
     "Table", "Aggregate", "FusedAggregate", "MERGE_SUM", "MERGE_MAX",
     "MERGE_MIN",
     "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",
+    "IterativeTask", "FitResult", "fit", "fit_grouped", "fit_stream",
     "IterationResult", "host_driver", "device_driver", "counted_driver",
     "relative_change", "ConvexProgram", "GradientAggregate",
     "HessianAggregate", "gradient_descent", "sgd", "parallel_sgd", "newton",

@@ -29,6 +29,10 @@ into ONE state pytree, so any engine above executes all of them in a
 single data pass — the paper's ``profile`` trick (§Table 1: every
 column's statistics in one table scan) generalized to arbitrary UDA sets.
 :func:`run_many` is the convenience front-end.
+
+Multipass methods wrap these one-pass engines in the unified iterative
+executor (:mod:`repro.core.iterative`), which re-executes an aggregate
+per driver round under a compiled loop — see ``IterativeTask``.
 """
 
 from __future__ import annotations

@@ -21,6 +21,15 @@ Solvers provided:
   same UDA pattern (logistic regression §4.2 uses this).
 * :func:`conjugate_gradient` — MADlib's CG support module (Table 1), a
   ``lax.while_loop`` over matvecs.
+
+Every solver's convergence loop routes through the unified iterative
+executor (:mod:`repro.core.iterative`): GD and Newton are single-pass
+tasks (:class:`GradientDescentTask` / :class:`NewtonTask`), SGD epochs
+are counted iterations of :class:`SGDEpochTask` — so all of them inherit
+the compiled ``lax.while_loop``/``scan`` fast path, sharded execution
+(the whole fit inside one ``shard_map`` program) and warm starts, and
+``svm`` / ``lasso`` / ``sgd_models`` inherit the executor through
+:class:`ConvexProgram` without further changes.
 """
 
 from __future__ import annotations
@@ -31,10 +40,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh
 
-from .aggregates import Aggregate, MERGE_SUM, run_sharded, run_local
-from .compat import shard_map as _compat_shard_map
+from .aggregates import Aggregate, MERGE_SUM
+from .iterative import IterativeTask, fit
 from .table import Table, Columns
 
 
@@ -116,37 +126,166 @@ class HessianAggregate(Aggregate):
         }
 
 
-def _run(agg, table, block_size):
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
-
-
 # ---------------------------------------------------------------------------
-# Solvers.
+# Solvers — every convergence loop below routes through the unified
+# iterative executor (repro.core.iterative); no solver owns a loop.
 # ---------------------------------------------------------------------------
+
+class GradientDescentTask(IterativeTask):
+    """Full-batch GD: the per-iteration pass is one GradientAggregate
+    execution; the driver step is ``w ← w − α·∇f``."""
+
+    def __init__(self, program: ConvexProgram, params0, stepsize: float,
+                 tol: float):
+        self.program = program
+        self.params0 = params0
+        self.stepsize = stepsize
+        self.tol = tol
+
+    def init_state(self, columns):
+        return {"params": self.params0, "gnorm": jnp.float32(jnp.inf)}
+
+    def make_aggregate(self, state):
+        return GradientAggregate(self.program, state["params"])
+
+    def update(self, state, out):
+        params = state["params"]
+        g = out["grad"]
+        if self.program.regularizer is not None:
+            g = jax.tree.map(
+                jnp.add, g, jax.grad(self.program.regularizer)(params))
+        gnorm = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g)))
+        # on convergence the pre-step params are the answer
+        stepped = jax.tree.map(
+            lambda p, gg: jnp.where(gnorm < self.tol, p,
+                                    p - self.stepsize * gg), params, g)
+        return {"params": stepped, "gnorm": gnorm}
+
+    def metric(self, prev, new, out):
+        return new["gnorm"]
+
+    def trace_record(self, state, out, m):
+        return (out["loss"], m)
+
 
 def gradient_descent(program: ConvexProgram, table: Table, params0,
                      *, stepsize: float = 1e-3, max_iters: int = 100,
-                     tol: float = 1e-6, block_size: int | None = None):
+                     tol: float = 1e-6, block_size: int | None = None,
+                     mode: str = "compiled"):
     """Full-batch GD; each round's gradient is one UDA execution."""
-    params = params0
-    trace = []
-    for it in range(1, max_iters + 1):
-        out = _run(GradientAggregate(program, params), table, block_size)
-        g = out["grad"]
-        if program.regularizer is not None:
-            g = jax.tree.map(
-                jnp.add, g, jax.grad(program.regularizer)(params)
-            )
-        gnorm = float(
-            jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g)))
-        )
-        trace.append((float(out["loss"]), gnorm))
-        if gnorm < tol:
-            return params, trace, True
-        params = jax.tree.map(lambda p, gg: p - stepsize * gg, params, g)
-    return params, trace, False
+    res = fit(GradientDescentTask(program, params0, stepsize, tol), table,
+              max_iters=max_iters, tol=tol, block_size=block_size, mode=mode)
+    losses, gnorms = res.trace
+    trace = list(zip(np.asarray(losses).tolist(),
+                     np.asarray(gnorms).tolist()))
+    return res.state["params"], trace, res.converged
+
+
+class NewtonTask(IterativeTask):
+    """Newton / IRLS: Hessian + gradient accumulated by one UDA pass,
+    driver step solves ``H δ = g``."""
+
+    def __init__(self, program: ConvexProgram, params0: jax.Array,
+                 ridge: float):
+        self.program = program
+        self.params0 = params0
+        self.ridge = ridge
+
+    def init_state(self, columns):
+        return {"params": self.params0, "delta": jnp.float32(jnp.inf)}
+
+    def make_aggregate(self, state):
+        return HessianAggregate(self.program, state["params"])
+
+    def update(self, state, out):
+        params = state["params"]
+        g, h = out["grad"], out["hess"]
+        if self.program.regularizer is not None:
+            g = g + jax.grad(self.program.regularizer)(params)
+            h = h + jax.hessian(self.program.regularizer)(params)
+        h = h + self.ridge * jnp.eye(h.shape[0])
+        step = jnp.linalg.solve(h, g)
+        new = params - step
+        delta = jnp.linalg.norm(step) / (jnp.linalg.norm(new) + 1e-12)
+        return {"params": new, "delta": delta}
+
+    def metric(self, prev, new, out):
+        return new["delta"]
+
+    def trace_record(self, state, out, m):
+        return (out["loss"], m)
+
+
+def newton(program: ConvexProgram, table: Table, params0: jax.Array, *,
+           max_iters: int = 20, tol: float = 1e-8, ridge: float = 1e-6,
+           block_size: int | None = None, mode: str = "compiled"):
+    """Newton's method with UDA-accumulated gradient/Hessian (IRLS engine)."""
+    res = fit(NewtonTask(program, params0, ridge), table,
+              max_iters=max_iters, tol=tol, block_size=block_size, mode=mode)
+    losses, deltas = res.trace
+    trace = list(zip(np.asarray(losses).tolist(),
+                     np.asarray(deltas).tolist()))
+    return res.state["params"], trace, res.converged
+
+
+class SGDEpochTask(IterativeTask):
+    """One executor iteration = one SGD epoch (Bismarck's IGD): a shuffled
+    pass over the engine-local rows, optionally with Robbins-Monro
+    stepsizes (paper Eq. 1, ``anneal=True``).
+
+    SGD is not a pure fold, so this task overrides :meth:`iteration` and
+    reads rows through ``run_pass.columns`` (shard-local inside the
+    sharded engine).  Zinkevich model averaging [47] happens ONCE after
+    all epochs via :meth:`mesh_epilogue` — the one-round mean-merge UDA
+    of the paper's §5.1, matching the pre-refactor ``parallel_sgd``."""
+
+    def __init__(self, program: ConvexProgram, params0, stepsize: float,
+                 batch: int, key: jax.Array, anneal: bool = True):
+        self.program = program
+        self.params0 = params0
+        self.stepsize = stepsize
+        self.batch = batch
+        self.key = key
+        self.anneal = anneal
+
+    def init_state(self, columns):
+        return {"params": self.params0, "epoch": jnp.int32(0),
+                "key": self.key}
+
+    def iteration(self, state, run_pass):
+        columns = run_pass.columns
+        if columns is None:
+            raise ValueError("SGDEpochTask needs row access; the stream "
+                             "engine cannot shuffle minibatches")
+        n = next(iter(columns.values())).shape[0]
+        nb = n // self.batch
+        key, sub = jax.random.split(state["key"])
+        if run_pass.row_axes:
+            # decorrelate shards: fold the segment index into the key
+            sub = jax.random.fold_in(
+                sub, jax.lax.axis_index(run_pass.row_axes))
+        alpha = self.stepsize / (1.0 + state["epoch"].astype(jnp.float32)) \
+            if self.anneal else jnp.float32(self.stepsize)
+        perm = jax.random.permutation(sub, n)[: nb * self.batch] \
+            .reshape(nb, self.batch)
+        gmask = run_pass.mask
+
+        def body(params, idx):
+            block = {k: v[idx] for k, v in columns.items()}
+            mask = jnp.ones((self.batch,), jnp.bool_) if gmask is None \
+                else gmask[idx]
+            g = jax.grad(self.program.total_loss)(params, block, mask)
+            return jax.tree.map(
+                lambda p, gg: p - alpha * gg / self.batch, params, g), None
+
+        params, _ = jax.lax.scan(body, state["params"], perm)
+        new = {"params": params, "epoch": state["epoch"] + 1, "key": key}
+        return new, jnp.zeros(()), jnp.float32(jnp.inf)
+
+    def mesh_epilogue(self, state, row_axes):
+        # model averaging = one-round mean-merge UDA, after all epochs
+        return {**state, "params": jax.tree.map(
+            lambda p: jax.lax.pmean(p, row_axes), state["params"])}
 
 
 def sgd(program: ConvexProgram, table: Table, params0, *, stepsize: float = 1e-2,
@@ -154,102 +293,31 @@ def sgd(program: ConvexProgram, table: Table, params0, *, stepsize: float = 1e-2
         anneal: bool = True):
     """Single-shard SGD with Robbins-Monro annealing (paper Eq. 1).
 
-    The per-step update runs as one fused jit (shuffle indices on host,
-    gather + grad + update on device)."""
+    Epochs run as counted executor iterations — the whole fit is one
+    compiled ``lax.scan`` over epochs of (shuffle, gather, grad, update)."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    n = table.n_rows
-    nb = n // batch
-
-    @jax.jit
-    def epoch_fn(params, perm, alpha):
-        def body(carry, idx):
-            params = carry
-            block = {k: v[idx] for k, v in table.columns.items()}
-            mask = jnp.ones((batch,), jnp.bool_)
-            g = jax.grad(program.total_loss)(params, block, mask)
-            params = jax.tree.map(lambda p, gg: p - alpha * gg / batch, params, g)
-            return params, None
-
-        idxs = perm[: nb * batch].reshape(nb, batch)
-        params, _ = jax.lax.scan(body, params, idxs)
-        return params
-
-    params = params0
-    for e in range(epochs):
-        key, sub = jax.random.split(key)
-        perm = jax.random.permutation(sub, n)
-        alpha = stepsize / (1.0 + e) if anneal else stepsize
-        params = epoch_fn(params, perm, alpha)
-    return params
+    task = SGDEpochTask(program, params0, stepsize, batch, key, anneal)
+    res = fit(task, table, max_iters=epochs, tol=None, engine="local")
+    return res.state["params"]
 
 
 def parallel_sgd(program: ConvexProgram, table: Table, params0, *,
                  stepsize: float = 1e-2, epochs: int = 1, batch: int = 64,
                  mesh: Mesh | None = None, row_axes=("data",),
                  key: jax.Array | None = None):
-    """Zinkevich model-averaging SGD [47]: local passes + pmean merge."""
+    """Zinkevich model-averaging SGD [47]: each segment runs its local
+    epochs (constant stepsize, as pre-refactor), then models are averaged
+    ONCE with a pmean — the whole fit compiled inside ONE shard_map
+    program via the executor's counted mode + mesh epilogue."""
     mesh = mesh or table.mesh
     if mesh is None:
         return sgd(program, table, params0, stepsize=stepsize, epochs=epochs,
                    batch=batch, key=key)
-    row_axes = tuple(row_axes or table.row_axes)
-    in_spec = jax.tree.map(
-        lambda v: P(row_axes, *([None] * (v.ndim - 1))), dict(table.columns)
-    )
-
-    def shard_fn(columns, params, key):
-        n = next(iter(columns.values())).shape[0]
-        # decorrelate shards: fold the shard index into the key
-        idx = jax.lax.axis_index(row_axes)
-        key = jax.random.fold_in(key, idx)
-        nb = n // batch
-
-        def epoch(params, ekey):
-            perm = jax.random.permutation(ekey, n)[: nb * batch].reshape(nb, batch)
-
-            def body(params, idx):
-                block = {k: v[idx] for k, v in columns.items()}
-                mask = jnp.ones((batch,), jnp.bool_)
-                g = jax.grad(program.total_loss)(params, block, mask)
-                return jax.tree.map(lambda p, gg: p - stepsize * gg / batch,
-                                    params, g), None
-
-            params, _ = jax.lax.scan(body, params, perm)
-            return params, None
-
-        params, _ = jax.lax.scan(epoch, params, jax.random.split(key, epochs))
-        # model averaging = one-round mean-merge UDA
-        return jax.tree.map(lambda p: jax.lax.pmean(p, row_axes), params)
-
-    fn = jax.jit(_compat_shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(in_spec, P(), P()),
-        out_specs=P(), check_vma=False,
-    ))
     key = key if key is not None else jax.random.PRNGKey(0)
-    return fn(dict(table.columns), params0, key)
-
-
-def newton(program: ConvexProgram, table: Table, params0: jax.Array, *,
-           max_iters: int = 20, tol: float = 1e-8, ridge: float = 1e-6,
-           block_size: int | None = None):
-    """Newton's method with UDA-accumulated gradient/Hessian (IRLS engine)."""
-    params = params0
-    trace = []
-    for it in range(1, max_iters + 1):
-        out = _run(HessianAggregate(program, params), table, block_size)
-        g, h = out["grad"], out["hess"]
-        if program.regularizer is not None:
-            g = g + jax.grad(program.regularizer)(params)
-            h = h + jax.hessian(program.regularizer)(params)
-        h = h + ridge * jnp.eye(h.shape[0])
-        step = jnp.linalg.solve(h, g)
-        params = params - step
-        delta = float(jnp.linalg.norm(step) / (jnp.linalg.norm(params) + 1e-12))
-        trace.append((float(out["loss"]), delta))
-        if delta < tol:
-            return params, trace, True
-    return params, trace, False
+    task = SGDEpochTask(program, params0, stepsize, batch, key, anneal=False)
+    res = fit(task, table, max_iters=epochs, tol=None, engine="sharded",
+              mesh=mesh, row_axes=tuple(row_axes or table.row_axes))
+    return res.state["params"]
 
 
 def conjugate_gradient(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,

@@ -1,22 +1,20 @@
 """Driver functions for multipass iteration — MADlib §3.1.2.
 
-MADlib implements iterative methods (IRLS, k-means, MCMC) with a thin
-Python driver that kicks off bulk parallel work each round and stages
-inter-iteration state in temp tables, so that *no large data ever moves
-through the driver*.  The two engines here preserve that design:
+Thin compatibility layer over :mod:`repro.core.iterative`, which owns the
+actual loop engines (the unified executor absorbed this module's
+``lax.while_loop`` / ``lax.scan`` / host-loop machinery).  These helpers
+remain for step-function-shaped iteration that has no table scan at all —
+``step: state -> state`` plus a convergence metric:
 
-* :func:`host_driver` — a host-side loop around a jitted, buffer-donating
-  step function.  Inter-iteration state lives in donated device buffers
-  (the temp-table analogue); the host pulls only the scalar convergence
-  criterion each round.  This is the paper-faithful pattern, and the right
-  one when each iteration is itself a big pjit computation (LM training).
-* :func:`device_driver` — a fully fused ``lax.while_loop`` with a
-  data-dependent stopping condition (the paper's "recursive query"
-  workaround, done natively).  Zero host round-trips; the whole iteration
-  compiles into one XLA program.
+* :func:`host_driver`   — host loop, donated device buffers, one scalar
+  pulled per round (the paper-faithful temp-table pattern).
+* :func:`device_driver` — fully fused ``lax.while_loop`` with
+  data-dependent stopping (the "recursive query" done natively).
+* :func:`counted_driver`— fixed-count ``lax.scan``.
 
-Both return an :class:`IterationResult` carrying the final state, iteration
-count, and a trace of the convergence metric.
+Anything that *does* scan a table each round should instead register an
+:class:`repro.core.iterative.IterativeTask` and call
+:func:`repro.core.iterative.fit`.
 """
 
 from __future__ import annotations
@@ -27,6 +25,8 @@ from typing import Any, Callable, TypeVar
 
 import jax
 import jax.numpy as jnp
+
+from .iterative import _while_fit, relative_change
 
 S = TypeVar("S")
 
@@ -75,27 +75,18 @@ def host_driver(step: StepFn, init_state: S, *, metric: MetricFn,
 
 def device_driver(step: StepFn, init_state: S, *, metric: MetricFn,
                   tol: float, max_iters: int) -> IterationResult:
-    """Fully on-device iteration via ``lax.while_loop``.
+    """Fully on-device iteration via the unified executor's
+    ``lax.while_loop`` fast path: the convergence test is part of the
+    compiled program, so the driver round-trip disappears entirely."""
 
-    The convergence test is part of the compiled program (data-dependent
-    stopping), so the driver round-trip disappears entirely.  The metric
-    trace is materialized as a fixed-size buffer (NaN beyond the stop).
-    """
+    def iter_fn(state):
+        new = step(state)
+        m = jnp.asarray(metric(state, new), jnp.float32)
+        return new, jnp.zeros(()), m, m  # aux unused; trace the metric
 
-    def cond(carry):
-        _, i, m, _ = carry
-        return jnp.logical_and(i < max_iters, m >= tol)
-
-    def body(carry):
-        prev, i, _, trace = carry
-        new = step(prev)
-        m = metric(prev, new)
-        trace = trace.at[i].set(m)
-        return new, i + 1, m, trace
-
-    trace0 = jnp.full((max_iters,), jnp.nan, jnp.float32)
-    init = (jax.tree.map(jnp.asarray, init_state), jnp.int32(0), jnp.float32(jnp.inf), trace0)
-    state, n, m, trace = jax.jit(lambda c: jax.lax.while_loop(cond, body, c))(init)
+    state, _, n, m, trace = jax.jit(
+        lambda s: _while_fit(iter_fn, s, max_iters, tol)
+    )(jax.tree.map(jnp.asarray, init_state))
     n = int(n)
     return IterationResult(state, n, bool(m < tol), trace[:n])
 
@@ -112,15 +103,3 @@ def counted_driver(step: StepFn, init_state: S, n_iters: int,
         lambda s: jax.lax.scan(body, s, None, length=n_iters, unroll=unroll)
     )(jax.tree.map(jnp.asarray, init_state))
     return state[0] if isinstance(state, tuple) and len(state) == 2 else state
-
-
-def relative_change(prev, new) -> jax.Array:
-    """Default convergence metric: ||new - prev|| / (||prev|| + eps)."""
-    dn = jax.tree.reduce(
-        lambda a, b: a + b,
-        jax.tree.map(lambda p, n: jnp.sum((n - p) ** 2), prev, new),
-    )
-    pn = jax.tree.reduce(
-        lambda a, b: a + b, jax.tree.map(lambda p: jnp.sum(p ** 2), prev)
-    )
-    return jnp.sqrt(dn) / (jnp.sqrt(pn) + 1e-12)

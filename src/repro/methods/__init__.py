@@ -12,6 +12,14 @@ data pass via ``core.aggregates.FusedAggregate`` / ``run_many``; methods
 with a Pallas hot loop (linregr, sketches, kmeans) take ``use_kernel``
 (True = backend-aware auto dispatch through ``kernels.registry``,
 "pallas"/"ref" force an implementation).
+
+Iterative methods (logregr IRLS, kmeans Lloyd, lda EM, the convex
+solvers) register an ``IterativeTask`` and run under
+``core.iterative.fit`` — never a hand-rolled loop — which gives every
+one of them the compiled while-loop fast path, sharded and streaming
+execution, warm starts, and per-group (GROUP BY) fitting via
+``fit_grouped`` (``logregr_grouped`` / ``linregr_grouped`` /
+``kmeans_grouped``).
 """
 
 from . import (  # noqa: F401

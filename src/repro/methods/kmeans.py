@@ -1,19 +1,29 @@
 """k-means clustering — the paper's large-state iteration example (§4.3).
 
-Two execution variants, per DESIGN.md §2:
+Both execution variants are tasks under the unified iterative executor
+(:mod:`repro.core.iterative`) — no hand-rolled Lloyd loop remains:
 
-* ``two_pass`` (paper-faithful): PostgreSQL executes queries one at a time,
-  so one Lloyd round = an UPDATE of the ``centroid_id`` column (pass 1) and
-  a barycenter aggregate (pass 2).  We reproduce that dataflow: an explicit
-  assignment column plus a separate aggregation, with reassignment counting
-  for the paper's convergence criterion ("no or only few points got
-  reassigned").
-* ``fused`` (beyond-paper): XLA has no one-statement-at-a-time limitation —
-  assignment + barycenter + reassignment count fuse into ONE pass (the
-  paper's footnote 1 says standard SQL *cannot* express this).  Optionally
-  routed through the kernels/kmeans_assign Pallas kernel.
+* :class:`KMeansTask` (``variant="fused"``, beyond-paper): assignment +
+  barycenter + reassignment count fuse into ONE pass per round (the
+  paper's footnote 1 says standard SQL *cannot* express this).
+  Optionally routed through the kernels/kmeans_assign Pallas kernel.
+* :class:`KMeansTwoPassTask` (``variant="two_pass"``, paper-faithful):
+  PostgreSQL executes one statement at a time, so a Lloyd round is TWO
+  passes — barycenters by the *stored* assignment column (statement 1),
+  then an UPDATE of that column counting reassignments (statement 2).
+  The assignment column is driver state; blocks address it through a
+  ``__row__`` index column, and the update pass writes it back as a
+  scatter-valued UDA (each row owned by exactly one block ⇒ sum-merge).
 
-Seeding: k-means++ [5], one distance UDA per seed pick.
+Through the executor, both variants inherit sharded execution, warm
+starts (``init_centroids``), and — for the fused task — per-group
+fitting (:func:`kmeans_grouped`).
+
+Seeding: k-means++ [5], with each round's D² statistics computed in ONE
+fused scan via ``run_many`` (a sum aggregate for the normalizer/potential
+plus a Gumbel-max argmax aggregate that samples the next seed ∝ D²
+without materializing the CDF) instead of a fresh all-centers distance
+pass per pick.
 """
 
 from __future__ import annotations
@@ -23,8 +33,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM, run_many
+from ..core.iterative import IterativeTask, fit, fit_grouped
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -37,14 +49,13 @@ def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
 
 
 class KMeansAggregate(Aggregate):
-    """One Lloyd round as a UDA.
+    """One fused Lloyd round as a UDA.
 
     Inter-iteration state = centroids (closed over, device-resident);
     intra-iteration state = {sums, counts, sse, moved} — exactly the
-    paper's inter/intra split (§4.3.1).  ``moved`` is computed against the
-    previous assignment column when provided (two-pass mode) or against the
-    previous centroids' assignment (fused mode does both assigns in one
-    pass — still one data read)."""
+    paper's inter/intra split (§4.3.1).  ``moved`` counts rows whose
+    assignment changed vs ``prev_centroids`` — both assigns happen in the
+    same data read (footnote 1: SQL can't; XLA can)."""
 
     merge_ops = MERGE_SUM
 
@@ -67,39 +78,23 @@ class KMeansAggregate(Aggregate):
     def transition(self, state, block, mask):
         x = block["x"]
         m = mask.astype(x.dtype)
-        if "centroid_id" in block:
-            # two-pass mode: barycenters by the STORED assignment column
-            # (this pass does no closest-centroid computation — the paper's
-            # "avoid half of the closest-centroid calculations").
-            assign = block["centroid_id"].astype(jnp.int32)
+        if self.kernel_impl is not None:
+            assign, mind, sums, counts = dispatch(
+                "kmeans_assign", x, self.centroids, m,
+                impl=self.kernel_impl)
+        else:
             d2 = _sq_dists(x, self.centroids)
-            mind = jnp.take_along_axis(d2, assign[:, None], 1)[:, 0]
+            assign = jnp.argmin(d2, axis=-1)
+            mind = jnp.min(d2, axis=-1)
             onehot = jax.nn.one_hot(assign, self.centroids.shape[0],
                                     dtype=x.dtype) * m[:, None]
             sums = onehot.T @ x
             counts = jnp.sum(onehot, axis=0)
-            moved = jnp.zeros((), x.dtype)
+        if self.prev_centroids is not None:
+            prev_assign = jnp.argmin(_sq_dists(x, self.prev_centroids), -1)
+            moved = jnp.sum((prev_assign != assign) * m)
         else:
-            if self.kernel_impl is not None:
-                assign, mind, sums, counts = dispatch(
-                    "kmeans_assign", x, self.centroids, m,
-                    impl=self.kernel_impl)
-            else:
-                d2 = _sq_dists(x, self.centroids)
-                assign = jnp.argmin(d2, axis=-1)
-                mind = jnp.min(d2, axis=-1)
-                onehot = jax.nn.one_hot(assign, self.centroids.shape[0],
-                                        dtype=x.dtype) * m[:, None]
-                sums = onehot.T @ x
-                counts = jnp.sum(onehot, axis=0)
-            if self.prev_centroids is not None:
-                # fused mode: both assignments in ONE data read (footnote 1:
-                # SQL can't; XLA can).
-                prev_assign = jnp.argmin(_sq_dists(x, self.prev_centroids),
-                                         -1)
-                moved = jnp.sum((prev_assign != assign) * m)
-            else:
-                moved = jnp.zeros((), x.dtype)
+            moved = jnp.zeros((), x.dtype)
         return {
             "sums": state["sums"] + sums,
             "counts": state["counts"] + counts,
@@ -115,6 +110,140 @@ class KMeansAggregate(Aggregate):
                 "counts": s["counts"]}
 
 
+class KMeansStoredAssignAggregate(Aggregate):
+    """Statement 1 of the two-pass round: barycenters by the STORED
+    assignment column (no closest-centroid computation beyond the sse
+    lookup — the paper's "avoid half of the closest-centroid
+    calculations").  The (n,) assignment lives in driver state; blocks
+    address it through the ``__row__`` index column."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, centroids: jax.Array, assign: jax.Array):
+        self.centroids = centroids
+        self.assign = assign
+
+    def init(self, block):
+        k, d = self.centroids.shape
+        f = self.centroids.dtype
+        return {
+            "sums": jnp.zeros((k, d), f),
+            "counts": jnp.zeros((k,), f),
+            "sse": jnp.zeros((), f),
+        }
+
+    def transition(self, state, block, mask):
+        x = block["x"]
+        m = mask.astype(x.dtype)
+        assign = self.assign[block["__row__"]]
+        d2 = _sq_dists(x, self.centroids)
+        mind = jnp.take_along_axis(d2, assign[:, None], 1)[:, 0]
+        onehot = jax.nn.one_hot(assign, self.centroids.shape[0],
+                                dtype=x.dtype) * m[:, None]
+        return {
+            "sums": state["sums"] + onehot.T @ x,
+            "counts": state["counts"] + jnp.sum(onehot, axis=0),
+            "sse": state["sse"] + jnp.sum(mind * m),
+        }
+
+    def final(self, s):
+        safe = jnp.maximum(s["counts"][:, None], 1.0)
+        new_c = jnp.where(s["counts"][:, None] > 0, s["sums"] / safe,
+                          self.centroids)
+        return {"centroids": new_c, "sse": s["sse"], "counts": s["counts"]}
+
+
+class KMeansReassignAggregate(Aggregate):
+    """Statement 2: ``UPDATE points SET centroid_id = closest(...)`` as a
+    scatter-valued UDA plus the reassignment count.  Each row is owned by
+    exactly one block/shard, so the scattered column sum-merges."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, centroids: jax.Array, prev_assign: jax.Array):
+        self.centroids = centroids
+        self.prev_assign = prev_assign
+
+    def init(self, block):
+        n = self.prev_assign.shape[0]
+        return {"assign": jnp.zeros((n,), jnp.int32),
+                "moved": jnp.zeros(())}
+
+    def transition(self, state, block, mask):
+        rows = block["__row__"]
+        assign = jnp.argmin(_sq_dists(block["x"], self.centroids), -1) \
+            .astype(jnp.int32)
+        m32 = mask.astype(jnp.int32)
+        prev = self.prev_assign[rows]
+        moved = jnp.sum(((assign != prev) & mask).astype(jnp.float32))
+        return {
+            "assign": state["assign"].at[rows].add(assign * m32),
+            "moved": state["moved"] + moved,
+        }
+
+
+class KMeansTask(IterativeTask):
+    """Fused Lloyd iteration: ONE shared scan per round."""
+
+    def __init__(self, init_centroids: jax.Array,
+                 use_kernel: bool | str = False):
+        self.init_centroids = init_centroids
+        self.use_kernel = use_kernel
+
+    def init_state(self, columns):
+        c = jnp.asarray(self.init_centroids)
+        return {"cents": c, "prev": c, "it": jnp.int32(0)}
+
+    def make_aggregate(self, state):
+        return KMeansAggregate(state["cents"], state["prev"],
+                               self.use_kernel)
+
+    def update(self, state, out):
+        return {"cents": out["centroids"], "prev": state["cents"],
+                "it": state["it"] + 1}
+
+    def metric(self, prev, new, out):
+        # reassignment fraction; first round has no meaningful count
+        n = jnp.maximum(jnp.sum(out["counts"]), 1.0)
+        return jnp.where(new["it"] <= 1, jnp.inf, out["moved"] / n)
+
+    def trace_record(self, state, out, m):
+        return out["sse"]
+
+
+class KMeansTwoPassTask(IterativeTask):
+    """Paper-faithful Lloyd iteration: two statements (= two data passes)
+    per round, with the assignment column as driver state.  (No
+    ``use_kernel``: neither statement computes the fused assign+barycenter
+    the kmeans_assign kernel implements — matching pre-refactor, which
+    never dispatched it on the two-pass path either.)"""
+
+    def __init__(self, init_centroids: jax.Array):
+        self.init_centroids = init_centroids
+
+    def init_state(self, columns):
+        c = jnp.asarray(self.init_centroids)
+        # statement 0: materialize the assignment column
+        assign = jnp.argmin(_sq_dists(columns["x"], c), -1).astype(jnp.int32)
+        return {"cents": c, "assign": assign, "it": jnp.int32(0)}
+
+    def iteration(self, state, run_pass):
+        # statement 1 (data pass 1): barycenters by stored assignment
+        out = run_pass(KMeansStoredAssignAggregate(state["cents"],
+                                                   state["assign"]))
+        # statement 2 (data pass 2): refresh assignments, count moves
+        upd = run_pass(KMeansReassignAggregate(out["centroids"],
+                                               state["assign"]))
+        new = {"cents": out["centroids"], "assign": upd["assign"],
+               "it": state["it"] + 1}
+        n = jnp.maximum(jnp.sum(out["counts"]), 1.0)
+        m = jnp.where(new["it"] <= 1, jnp.inf, upd["moved"] / n)
+        return new, {"sse": out["sse"], "counts": out["counts"]}, m
+
+    def trace_record(self, state, out, m):
+        return out["sse"]
+
+
 @dataclasses.dataclass
 class KMeansResult:
     centroids: jax.Array
@@ -124,72 +253,147 @@ class KMeansResult:
     sse_trace: list
 
 
-def _run(agg, table, block_size):
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+# ---------------------------------------------------------------------------
+# k-means++ seeding: one fused scan per round (ROADMAP open item).
+# ---------------------------------------------------------------------------
+
+class SumD2Aggregate(Aggregate):
+    """Normalizer Σ D² (the k-means++ "potential") of the running d2 column."""
+
+    merge_ops = MERGE_SUM
+
+    def init(self, block):
+        return jnp.zeros(())
+
+    def transition(self, state, block, mask):
+        return state + jnp.sum(block["d2"] * mask.astype(jnp.float32))
+
+
+class GumbelPickAggregate(Aggregate):
+    """Samples one row index ∝ its ``d2`` column in a single scan via the
+    Gumbel-max trick: argmax(log d2 + Gumbel) over rows.  The argmax
+    state (score, winning row's x) uses a generic merge."""
+
+    merge_ops = None  # generic: compare-and-keep is not leaf-wise
+
+    def __init__(self, key: jax.Array, d: int):
+        self.key = key
+        self.d = d
+
+    def init(self, block):
+        return {"score": jnp.full((), -jnp.inf),
+                "x": jnp.zeros((self.d,), block["x"].dtype)}
+
+    def transition(self, state, block, mask):
+        rows = block["__row__"]
+        keys = jax.vmap(partial(jax.random.fold_in, self.key))(rows)
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+        gumbel = -jnp.log(-jnp.log(jnp.clip(u, 1e-12, 1.0 - 1e-12)))
+        score = jnp.where(
+            mask & (block["d2"] > 0.0),
+            jnp.log(jnp.maximum(block["d2"], 1e-30)) + gumbel, -jnp.inf)
+        i = jnp.argmax(score)
+        cand = {"score": score[i], "x": block["x"][i]}
+        return self.merge(state, cand)
+
+    def merge(self, a, b):
+        take_b = b["score"] > a["score"]
+        return jax.tree.map(lambda xa, xb: jnp.where(take_b, xb, xa), a, b)
 
 
 def kmeans_pp_seed(table: Table, k: int, key: jax.Array,
                    x_col: str = "x") -> jax.Array:
-    """k-means++ seeding [5]: one D² pass per pick (k UDA rounds)."""
+    """k-means++ seeding [5] in ONE fused scan per pick: ``run_many``
+    folds the D² normalizer (potential) and the Gumbel-max sampler over
+    the same pass, and the running D² column is refreshed against only
+    the newest center (instead of re-scanning all centers each round)."""
     x = table[x_col]
-    n = x.shape[0]
+    n, d = x.shape
     key, sub = jax.random.split(key)
-    first = x[jax.random.randint(sub, (), 0, n)]
-    cents = first[None, :]
-    for _ in range(1, k):
-        d2 = jnp.min(_sq_dists(x, cents), axis=-1)
+    cents = [x[jax.random.randint(sub, (), 0, n)]]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    d2 = jnp.sum((x - cents[0][None, :]) ** 2, -1)
+    for r in range(1, k):
         key, sub = jax.random.split(key)
-        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
-        idx = jax.random.choice(sub, n, p=probs)
-        cents = jnp.concatenate([cents, x[idx][None, :]], axis=0)
-    return cents
+        t = Table({"x": x, "d2": d2, "__row__": rows}, table.mesh,
+                  table.row_axes)
+        out = run_many({"z": SumD2Aggregate(),
+                        "pick": GumbelPickAggregate(sub, d)}, t)
+        # degenerate potential (all points on centers): fall back to row 0
+        newc = jnp.where(out["z"] > 0.0, out["pick"]["x"], x[0])
+        cents.append(newc)
+        d2 = jnp.minimum(d2, jnp.sum((x - newc[None, :]) ** 2, -1))
+    return jnp.stack(cents)
 
+
+# ---------------------------------------------------------------------------
+# Drivers.
+# ---------------------------------------------------------------------------
 
 def kmeans_fit(table: Table, k: int, *, key: jax.Array | None = None,
                max_iters: int = 50, reassign_frac_tol: float = 0.0,
                variant: str = "fused", block_size: int | None = None,
                init_centroids: jax.Array | None = None,
-               use_kernel: bool | str = False, x_col: str = "x"
-               ) -> KMeansResult:
-    """Lloyd's algorithm under a MADlib driver (§3.1.2 pattern)."""
+               init: str = "kmeans++", use_kernel: bool | str = False,
+               x_col: str = "x", mode: str = "compiled") -> KMeansResult:
+    """Lloyd's algorithm under the unified executor (§3.1.2 pattern).
+
+    ``init_centroids`` warm-starts the task; otherwise ``init`` picks the
+    seeding ("kmeans++" = the fused one-scan-per-round seeding, "random"
+    = uniform rows).  Converges when the reassignment fraction drops to
+    ``reassign_frac_tol`` (checked from round 2, like the paper's "no or
+    only few points got reassigned")."""
     assert variant in ("fused", "two_pass")
     key = key if key is not None else jax.random.PRNGKey(0)
     t = Table({"x": table[x_col]}, table.mesh, table.row_axes)
-    cents = (init_centroids if init_centroids is not None
-             else kmeans_pp_seed(t, k, key))
     n = t.n_rows
-    prev = None
-    assign_col = None
-    sse_trace = []
-    converged = False
-    it = 0
+    if init_centroids is not None:
+        cents = jnp.asarray(init_centroids)
+    elif init == "kmeans++":
+        cents = kmeans_pp_seed(t, k, key)
+    elif init == "random":
+        cents = t["x"][jax.random.choice(key, n, (k,), replace=False)]
+    else:
+        raise ValueError(f"unknown init {init!r}")
 
     if variant == "two_pass":
-        # statement 0: materialize the assignment column
-        # (UPDATE points SET centroid_id = closest_column(centroids, coords))
-        assign_col = jnp.argmin(_sq_dists(t["x"], cents), axis=-1)
+        t = t.with_column("__row__", jnp.arange(n, dtype=jnp.int32))
+        task: IterativeTask = KMeansTwoPassTask(cents)
+    else:
+        task = KMeansTask(cents, use_kernel)
+    # moved/n is an integer multiple of 1/n, so +0.5/n makes "< tol"
+    # exactly the paper's "moved <= reassign_frac_tol * n"
+    res = fit(task, t, max_iters=max_iters,
+              tol=reassign_frac_tol + 0.5 / n, block_size=block_size,
+              mode=mode)
+    sse_trace = [float(v) for v in res.trace]
+    return KMeansResult(res.state["cents"], sse_trace[-1], res.n_iters,
+                        res.converged, sse_trace)
 
-    for it in range(1, max_iters + 1):
-        if variant == "two_pass":
-            # statement 1 (data pass 1): barycenters by stored assignment
-            data = t.with_column("centroid_id", assign_col)
-            out = _run(KMeansAggregate(cents, None, use_kernel), data,
-                       block_size)
-            # statement 2 (data pass 2): refresh assignments, count moves
-            new_assign = jnp.argmin(
-                _sq_dists(t["x"], out["centroids"]), -1)
-            moved = float(jnp.sum(new_assign != assign_col))
-            assign_col = new_assign
-        else:
-            out = _run(KMeansAggregate(cents, prev, use_kernel), t,
-                       block_size)
-            moved = float(out["moved"])
-        prev = cents
-        cents = out["centroids"]
-        sse_trace.append(float(out["sse"]))
-        if it > 1 and moved <= reassign_frac_tol * n:
-            converged = True
-            break
-    return KMeansResult(cents, sse_trace[-1], it, converged, sse_trace)
+
+def kmeans_grouped(table: Table, key_col: str, k: int,
+                   num_groups: int | None = None, *,
+                   init_centroids: jax.Array, max_iters: int = 50,
+                   reassign_frac_tol: float = 0.0,
+                   x_col: str = "x") -> KMeansResult:
+    """One k-means model per group in shared scans (GROUP BY fitting).
+
+    ``init_centroids`` is required — either one ``(k, d)`` seeding shared
+    by every group or a stacked ``(G, k, d)`` per-group seeding.  Returns
+    a :class:`KMeansResult` whose fields carry a leading group axis."""
+    t = Table({"x": table[x_col], key_col: table[key_col]}, table.mesh,
+              table.row_axes)
+    init_centroids = jnp.asarray(init_centroids)
+    task = KMeansTask(init_centroids if init_centroids.ndim == 2
+                      else init_centroids[0])
+    warm = None
+    if init_centroids.ndim == 3:
+        warm = {"cents": init_centroids, "prev": init_centroids,
+                "it": jnp.zeros((init_centroids.shape[0],), jnp.int32)}
+    n = t.n_rows
+    res = fit_grouped(task, t, key_col, num_groups, max_iters=max_iters,
+                      tol=reassign_frac_tol + 0.5 / n, warm_start=warm)
+    sse = res.trace[np.arange(len(res.n_iters)), res.n_iters - 1] \
+        if res.trace.size else res.trace
+    return KMeansResult(res.state["cents"], sse, res.n_iters,
+                        res.converged, res.trace)

@@ -3,8 +3,9 @@
 Documents are table rows holding bag-of-words count vectors.  One EM round
 is one aggregate pass: the transition runs a few mean-field updates per
 document (γ, φ) against the current topics β and accumulates expected
-topic-word counts; merge = sum; final renormalizes into new topics.  The
-outer loop is a MADlib driver with perplexity-based convergence.
+topic-word counts; merge = sum; the M-step renormalization is the driver
+update of :class:`LDATask` under the unified iterative executor, with
+perplexity-change convergence.
 """
 
 from __future__ import annotations
@@ -12,7 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.iterative import IterativeTask, fit
 from ..core.table import Table
 
 
@@ -68,28 +70,45 @@ class LDAEStepAggregate(Aggregate):
         }
 
 
+class LDATask(IterativeTask):
+    """Variational EM as an executor task: state = (log topics, perplexity);
+    one pass = the E-step aggregate; driver update = the M-step
+    renormalization; metric = relative perplexity change."""
+
+    def __init__(self, log_beta0: jax.Array, alpha: float, eta: float):
+        self.log_beta0 = log_beta0
+        self.alpha = alpha
+        self.eta = eta
+
+    def init_state(self, columns):
+        return {"log_beta": self.log_beta0, "perp": jnp.float32(jnp.inf)}
+
+    def make_aggregate(self, state):
+        return LDAEStepAggregate(state["log_beta"], self.alpha)
+
+    def update(self, state, out):
+        counts = out["counts"] + self.eta
+        log_beta = jnp.log(counts) - jnp.log(
+            jnp.sum(counts, -1, keepdims=True))
+        perp = jnp.exp(-out["bound"] / jnp.maximum(out["n_tokens"], 1))
+        return {"log_beta": log_beta, "perp": perp}
+
+    def metric(self, prev, new, out):
+        return jnp.abs(prev["perp"] - new["perp"]) \
+            / jnp.maximum(new["perp"], 1e-9)
+
+    def trace_record(self, state, out, m):
+        return state["perp"]
+
+
 def lda_fit(table: Table, n_topics: int, vocab: int, *,
             alpha: float = 0.1, eta: float = 0.01, max_iters: int = 30,
             tol: float = 1e-4, key: jax.Array | None = None,
-            block_size: int | None = None):
+            block_size: int | None = None, mode: str = "compiled"):
     """Variational EM; returns (topics (K,V), perplexity trace)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     beta = jax.random.dirichlet(key, jnp.full((vocab,), 1.0), (n_topics,))
     log_beta = jnp.log(jnp.maximum(beta, 1e-12))
-    trace = []
-    prev_perp = jnp.inf
-    for it in range(max_iters):
-        agg = LDAEStepAggregate(log_beta, alpha)
-        if table.mesh is not None:
-            out = run_sharded(agg, table, block_size=block_size)
-        else:
-            out = run_local(agg, table, block_size=block_size)
-        counts = out["counts"] + eta
-        log_beta = jnp.log(counts) - jnp.log(
-            jnp.sum(counts, -1, keepdims=True))
-        perp = float(jnp.exp(-out["bound"] / jnp.maximum(out["n_tokens"], 1)))
-        trace.append(perp)
-        if abs(prev_perp - perp) / max(perp, 1e-9) < tol:
-            break
-        prev_perp = perp
-    return jnp.exp(log_beta), trace
+    res = fit(LDATask(log_beta, alpha, eta), table, max_iters=max_iters,
+              tol=tol, block_size=block_size, mode=mode)
+    return jnp.exp(res.state["log_beta"]), [float(p) for p in res.trace]

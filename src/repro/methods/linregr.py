@@ -15,7 +15,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.iterative import IterativeTask, fit, fit_grouped
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -102,13 +103,46 @@ jax.tree_util.register_pytree_node(
 )
 
 
+class LinregrTask(IterativeTask):
+    """OLS as a degenerate (single-pass, counted) executor task — which is
+    exactly what buys it ``GROUP BY`` fitting via :func:`fit_grouped`:
+    the paper's grouped linregr (§4.1) is ``linregr_grouped`` below."""
+
+    def __init__(self, use_kernel: bool | str = False):
+        self.use_kernel = use_kernel
+
+    def init_state(self, columns):
+        return jnp.zeros(())  # stateless: everything lives in the pass
+
+    def make_aggregate(self, state):
+        return LinregrAggregate(use_kernel=self.use_kernel)
+
+    def update(self, state, out):
+        return state
+
+    def finalize(self, state, out):
+        return out
+
+
 def linregr(table: Table, *, x_col: str = "x", y_col: str = "y",
             block_size: int | None = None, use_kernel: bool | str = False
             ) -> LinregrResult:
     """``SELECT (linregr(y, x)).* FROM data`` — sharded when the table is."""
     t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
               table.row_axes)
-    agg = LinregrAggregate(use_kernel=use_kernel)
-    if t.mesh is not None:
-        return run_sharded(agg, t, block_size=block_size)
-    return run_local(agg, t, block_size=block_size)
+    res = fit(LinregrTask(use_kernel), t, max_iters=1, tol=None,
+              block_size=block_size)
+    return res.result
+
+
+def linregr_grouped(table: Table, key_col: str,
+                    num_groups: int | None = None, *, x_col: str = "x",
+                    y_col: str = "y", block_size: int | None = None,
+                    use_kernel: bool | str = False) -> LinregrResult:
+    """``SELECT g, (linregr(y, x)).* FROM data GROUP BY g`` — one model per
+    group in a shared scan; every result field has a leading group axis."""
+    t = Table({"x": table[x_col], "y": table[y_col],
+               key_col: table[key_col]}, table.mesh, table.row_axes)
+    res = fit_grouped(LinregrTask(use_kernel), t, key_col, num_groups,
+                      max_iters=1, tol=None, block_size=block_size)
+    return res.result

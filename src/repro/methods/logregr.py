@@ -4,7 +4,10 @@ Paper-faithful solver: Newton's method as *iteratively reweighted least
 squares*, ``β ← (X^T D X)^{-1} X^T D z`` with ``D = diag(p(1-p))`` and
 ``z = Xβ + D^{-1}(y - p)``.  Each iteration is one UDA execution
 (transition accumulates ``X^T D X`` and ``X^T D z``; merge = sum); the
-outer loop is a driver that keeps state device-resident (§3.1.2).
+outer loop is :class:`IRLSTask` under the unified iterative executor
+(§3.1.2 driver pattern) — which means IRLS inherits the compiled
+``lax.while_loop`` fast path, sharded/streaming execution and per-group
+(GROUP BY) fitting (:func:`logregr_grouped`) for free.
 
 Also provided: the §5.1 SGD solver over the same objective, for the
 Table-2 benchmark.
@@ -17,8 +20,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
 from ..core.convex import ConvexProgram, sgd as sgd_solver, parallel_sgd
+from ..core.iterative import IterativeTask, fit, fit_grouped, fit_stream
 from ..core.table import Table
 
 
@@ -68,39 +72,85 @@ class IRLSAggregate(Aggregate):
         }
 
 
-def _run(agg, table, block_size):
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+class IRLSTask(IterativeTask):
+    """IRLS as an executor task: state = β; one pass = one IRLSAggregate;
+    driver update = the weighted-least-squares solve; metric = relative
+    coefficient change; finalize = Wald statistics from the last pass's
+    Fisher information."""
+
+    def __init__(self, ridge: float = 1e-8):
+        self.ridge = ridge
+
+    def init_state(self, columns):
+        return {"beta": jnp.zeros((columns["x"].shape[-1],))}
+
+    def make_aggregate(self, state):
+        return IRLSAggregate(state["beta"])
+
+    def update(self, state, out):
+        d = out["xdx"].shape[0]
+        beta = jnp.linalg.solve(out["xdx"] + self.ridge * jnp.eye(d),
+                                out["xdz"])
+        return {"beta": beta}
+
+    def metric(self, prev, new, out):
+        return jnp.linalg.norm(new["beta"] - prev["beta"]) \
+            / (jnp.linalg.norm(prev["beta"]) + 1e-12)
+
+    def finalize(self, state, out):
+        # Wald statistics from the final Fisher information (X^T D X)^{-1}.
+        beta = state["beta"]
+        d = beta.shape[0]
+        cov = jnp.linalg.inv(out["xdx"] + 1e-8 * jnp.eye(d))
+        se = jnp.sqrt(jnp.maximum(jnp.diag(cov), 0.0))
+        z = beta / jnp.maximum(se, 1e-30)
+        p = 2.0 * (1.0 - jax.scipy.stats.norm.cdf(jnp.abs(z)))
+        return {"coef": beta, "ll": out["ll"], "se": se, "z": z, "p": p}
+
+
+def _result(res) -> LogregrResult:
+    f = res.result
+    return LogregrResult(f["coef"], f["ll"], f["se"], f["z"], f["p"],
+                         res.n_iters, res.converged)
 
 
 def logregr(table: Table, *, x_col: str = "x", y_col: str = "y",
             max_iters: int = 30, tol: float = 1e-6,
-            block_size: int | None = None) -> LogregrResult:
-    """``SELECT * FROM logregr('y', 'x', 'data')`` — IRLS driver."""
+            block_size: int | None = None, mode: str = "compiled",
+            warm_start: jax.Array | None = None) -> LogregrResult:
+    """``SELECT * FROM logregr('y', 'x', 'data')`` — IRLS under the
+    unified executor (sharded automatically when the table is)."""
     t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
               table.row_axes)
-    d = t["x"].shape[-1]
-    beta = jnp.zeros((d,))
-    converged = False
-    it = 0
-    state = None
-    for it in range(1, max_iters + 1):
-        state = _run(IRLSAggregate(beta), t, block_size)
-        ridge = 1e-8 * jnp.eye(d)
-        new_beta = jnp.linalg.solve(state["xdx"] + ridge, state["xdz"])
-        delta = float(jnp.linalg.norm(new_beta - beta)
-                      / (jnp.linalg.norm(beta) + 1e-12))
-        beta = new_beta
-        if delta < tol:
-            converged = True
-            break
-    # Wald statistics from the final Fisher information (X^T D X)^{-1}.
-    cov = jnp.linalg.inv(state["xdx"] + 1e-8 * jnp.eye(d))
-    se = jnp.sqrt(jnp.maximum(jnp.diag(cov), 0.0))
-    z = beta / jnp.maximum(se, 1e-30)
-    p = 2.0 * (1.0 - jax.scipy.stats.norm.cdf(jnp.abs(z)))
-    return LogregrResult(beta, state["ll"], se, z, p, it, converged)
+    ws = None if warm_start is None else {"beta": jnp.asarray(warm_start)}
+    res = fit(IRLSTask(), t, max_iters=max_iters, tol=tol,
+              block_size=block_size, mode=mode, warm_start=ws)
+    return _result(res)
+
+
+def logregr_stream(blocks_factory, *, max_iters: int = 30,
+                   tol: float = 1e-6) -> LogregrResult:
+    """Out-of-core IRLS: each iteration streams the blocks from a fresh
+    ``blocks_factory()`` (dicts with "x"/"y") with device-resident state."""
+    res = fit_stream(IRLSTask(), blocks_factory, max_iters=max_iters,
+                     tol=tol)
+    return _result(res)
+
+
+def logregr_grouped(table: Table, key_col: str,
+                    num_groups: int | None = None, *,
+                    x_col: str = "x", y_col: str = "y",
+                    max_iters: int = 30, tol: float = 1e-6,
+                    block_size: int | None = None) -> LogregrResult:
+    """One logistic model per group, fit in shared scans
+    (``SELECT g, (logregr(y, x)).* FROM data GROUP BY g``).  Every field
+    of the result carries a leading group axis; ``n_iters``/``converged``
+    are per-group vectors."""
+    t = Table({"x": table[x_col], "y": table[y_col],
+               key_col: table[key_col]}, table.mesh, table.row_axes)
+    res = fit_grouped(IRLSTask(), t, key_col, num_groups,
+                      max_iters=max_iters, tol=tol, block_size=block_size)
+    return _result(res)
 
 
 # ---------------------------------------------------------------------------

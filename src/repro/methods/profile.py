@@ -13,9 +13,12 @@ one-aggregate-per-scan baseline.
 
 from __future__ import annotations
 
+import itertools
+
 import jax.numpy as jnp
 
-from ..core.aggregates import FusedAggregate, run_local, run_sharded
+from ..core.aggregates import FusedAggregate, run_local, run_sharded, \
+    run_stream
 from ..core.table import Table
 from ..core.templates import ProfileAggregate
 from .sketches import FMAggregate
@@ -41,6 +44,14 @@ def profile_aggregates(table: Table, *, distinct_counts: bool = False
     return aggs
 
 
+def _shape_results(results: dict) -> dict:
+    out = {name: dict(stats) for name, stats in results[_STATS].items()}
+    for key, est in results.items():
+        if key.startswith(_FM):
+            out[key[len(_FM):]]["approx_distinct"] = est
+    return out
+
+
 def profile(table: Table, *, distinct_counts: bool = False,
             block_size: int | None = None, jit: bool = True) -> dict:
     """Univariate stats for every numeric column (+ approximate distinct
@@ -51,8 +62,25 @@ def profile(table: Table, *, distinct_counts: bool = False,
         results = run_sharded(fused, table, block_size=block_size, jit=jit)
     else:
         results = run_local(fused, table, block_size=block_size, jit=jit)
-    out = {name: dict(stats) for name, stats in results[_STATS].items()}
-    for key, est in results.items():
-        if key.startswith(_FM):
-            out[key[len(_FM):]]["approx_distinct"] = est
-    return out
+    return _shape_results(results)
+
+
+def profile_stream(blocks, *, distinct_counts: bool = False) -> dict:
+    """Streaming fused profile — the out-of-core workload (ROADMAP item).
+
+    ``blocks`` is a host-side iterable of column dicts (e.g. one per file
+    of an out-of-core table).  The whole fused aggregate set — stats AND
+    the FM/CM sketch states — lives in ONE device-resident pytree that is
+    donated between chunks, so no chunk is ever re-read and the host only
+    schedules.  Same numbers as :func:`profile` on the concatenated
+    table, still exactly one pass over the data.
+    """
+    it = iter(blocks)
+    try:
+        first = {k: jnp.asarray(v) for k, v in next(it).items()}
+    except StopIteration:
+        raise ValueError("profile_stream: empty block stream") from None
+    fused = FusedAggregate(profile_aggregates(
+        Table.from_columns(first), distinct_counts=distinct_counts))
+    results = run_stream(fused, itertools.chain([first], it))
+    return _shape_results(results)

@@ -5,6 +5,11 @@ rows) handed to the same SGD solver — the Wisconsin contribution's thesis:
 "specify the model, not the algorithm".  The benchmark harness
 (benchmarks/bench_sgd_models.py) fits all six rows of Table 2 through
 this registry.
+
+The solver side is equally unified: ``sgd``/``parallel_sgd`` are counted
+iterations of ``SGDEpochTask`` under ``repro.core.iterative``, so every
+registry model inherits the compiled epoch loop and the sharded
+(Zinkevich model-averaging) engine with no per-model code.
 """
 
 from __future__ import annotations

@@ -3,6 +3,11 @@
 Linear SVM via the §5.1 convex abstraction: hinge loss Σ (1 − y·xᵀw)₊ with
 L2 regularization, solved by SGD (the paper's own SVM is SGD-based) — plus
 a deterministic subgradient descent path for reproducible tests.
+
+No loop lives here: both solvers run under the unified iterative executor
+through :class:`~repro.core.convex.ConvexProgram`, so SVM inherits the
+compiled epoch scan, sharded (model-averaging) execution and warm starts
+from ``repro.core.iterative`` without SVM-specific code.
 """
 
 from __future__ import annotations

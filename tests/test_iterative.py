@@ -1,0 +1,314 @@
+"""Unified iterative executor: oracle equivalence + grouped/stream engines.
+
+The refactor contract: porting a method onto ``repro.core.iterative``
+changes HOW the loop executes (compiled while_loop, engines), never WHAT
+it computes — so every test here compares against either the hand-rolled
+pre-refactor dataflow or a solo per-group fit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConvexProgram, Table, fit, fit_grouped, fit_stream,
+    synthetic_classification_table, synthetic_regression_table,
+)
+from repro.core.aggregates import run_local, run_sharded
+from repro.methods.logregr import (
+    IRLSAggregate, IRLSTask, logregr, logregr_grouped, logregr_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def cls_table(key):
+    return synthetic_classification_table(key, 4096, 5)
+
+
+def _oracle_irls(t, max_iters=30, tol=1e-6):
+    """The pre-refactor hand-rolled IRLS loop, verbatim."""
+    d = t["x"].shape[-1]
+    beta = jnp.zeros((d,))
+    converged = False
+    state = None
+    it = 0
+    for it in range(1, max_iters + 1):
+        state = run_local(IRLSAggregate(beta), t)
+        new_beta = jnp.linalg.solve(state["xdx"] + 1e-8 * jnp.eye(d),
+                                    state["xdz"])
+        delta = float(jnp.linalg.norm(new_beta - beta)
+                      / (jnp.linalg.norm(beta) + 1e-12))
+        beta = new_beta
+        if delta < tol:
+            converged = True
+            break
+    return beta, state["ll"], it, converged
+
+
+# -- oracle equivalence -------------------------------------------------------
+
+def test_irls_matches_prerefactor_loop(cls_table):
+    tbl, _ = cls_table
+    res = logregr(tbl, max_iters=30, tol=1e-6)
+    beta, ll, it, conv = _oracle_irls(tbl)
+    np.testing.assert_allclose(np.asarray(res.coef), np.asarray(beta),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(res.log_likelihood), float(ll),
+                               rtol=1e-5)
+    assert res.n_iters == it
+    assert res.converged == conv
+
+
+def test_host_mode_matches_compiled(cls_table):
+    tbl, _ = cls_table
+    a = logregr(tbl, max_iters=30)
+    b = logregr(tbl, max_iters=30, mode="host")
+    np.testing.assert_allclose(np.asarray(a.coef), np.asarray(b.coef),
+                               rtol=1e-5, atol=1e-6)
+    assert a.n_iters == b.n_iters and a.converged == b.converged
+
+
+def test_sharded_engine_matches_local(cls_table, mesh1):
+    tbl, _ = cls_table
+    local = logregr(tbl, max_iters=30)
+    sharded = logregr(tbl.distribute(mesh1), max_iters=30, block_size=512)
+    np.testing.assert_allclose(np.asarray(local.coef),
+                               np.asarray(sharded.coef),
+                               rtol=1e-4, atol=1e-5)
+    assert sharded.converged
+
+
+def test_warm_start_skips_iterations(cls_table):
+    tbl, _ = cls_table
+    cold = logregr(tbl, max_iters=30)
+    warm = logregr(tbl, max_iters=30, warm_start=cold.coef)
+    assert warm.converged and warm.n_iters <= 2
+    np.testing.assert_allclose(np.asarray(warm.coef), np.asarray(cold.coef),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_stream_engine_matches_local(cls_table):
+    tbl, _ = cls_table
+    local = logregr(tbl, max_iters=30)
+    stream = logregr_stream(
+        lambda: (dict(b.columns) for b in tbl.blocks(600)), max_iters=30)
+    np.testing.assert_allclose(np.asarray(local.coef),
+                               np.asarray(stream.coef),
+                               rtol=1e-4, atol=1e-5)
+    assert stream.converged and stream.n_iters == local.n_iters
+
+
+def test_sgd_epochs_match_prerefactor(cls_table, key):
+    """Counted (tol=None) executor mode: the SGD epoch task reproduces the
+    pre-refactor host epoch loop bit-for-bit (same key sequence)."""
+    from repro.core import sgd
+    tbl, _ = cls_table
+
+    def logloss(params, block, mask):
+        z = block["x"] @ params
+        return jnp.sum(jnp.where(block["y"] > 0.5, jax.nn.softplus(-z),
+                                 jax.nn.softplus(z)) * mask)
+
+    prog = ConvexProgram(loss=logloss)
+    new = sgd(prog, tbl, jnp.zeros(5), stepsize=0.5, epochs=3, batch=128,
+              key=key)
+
+    # pre-refactor reference: host loop, split-per-epoch, shuffled batches
+    params = jnp.zeros(5)
+    k = key
+    n = tbl.n_rows
+    nb = n // 128
+    for e in range(3):
+        k, sub = jax.random.split(k)
+        perm = jax.random.permutation(sub, n)[: nb * 128].reshape(nb, 128)
+        alpha = 0.5 / (1.0 + e)
+
+        def body(p, idx):
+            block = {c: v[idx] for c, v in tbl.columns.items()}
+            g = jax.grad(prog.total_loss)(p, block,
+                                          jnp.ones((128,), jnp.bool_))
+            return jax.tree.map(lambda pp, gg: pp - alpha * gg / 128, p, g), \
+                None
+
+        params, _ = jax.lax.scan(body, params, perm)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(params),
+                               rtol=1e-6, atol=1e-7)
+
+
+# -- GROUP BY model fitting ---------------------------------------------------
+
+def _concat_groups(key, sizes, d=4):
+    """Per-group synthetic logistic data with DIFFERENT true coefficients,
+    concatenated into one table with a group column."""
+    xs, ys, gs, betas = [], [], [], []
+    for g, n in enumerate(sizes):
+        tbl, b = synthetic_classification_table(
+            jax.random.fold_in(key, g), n, d)
+        xs.append(tbl["x"])
+        ys.append(tbl["y"])
+        gs.append(jnp.full((n,), g, jnp.int32))
+        betas.append(b)
+    return Table.from_columns({
+        "x": jnp.concatenate(xs), "y": jnp.concatenate(ys),
+        "g": jnp.concatenate(gs)}), betas
+
+
+def test_grouped_logregr_matches_solo(key):
+    tbl, _ = _concat_groups(key, [1024, 2048, 512])
+    grouped = logregr_grouped(tbl, "g")
+    assert grouped.coef.shape == (3, 4)
+    for g, n in enumerate([1024, 2048, 512]):
+        sel = np.asarray(tbl["g"]) == g
+        solo = logregr(Table.from_columns(
+            {"x": tbl["x"][sel], "y": tbl["y"][sel]}))
+        np.testing.assert_allclose(np.asarray(grouped.coef[g]),
+                                   np.asarray(solo.coef),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(grouped.log_likelihood[g]),
+                                   float(solo.log_likelihood), rtol=1e-4)
+        assert int(grouped.n_iters[g]) == solo.n_iters
+        assert bool(grouped.converged[g]) == solo.converged
+
+
+def test_grouped_single_group_matches_plain(key):
+    tbl, _ = synthetic_classification_table(key, 2048, 4)
+    tg = tbl.with_column("g", jnp.zeros((2048,), jnp.int32))
+    grouped = logregr_grouped(tg, "g")
+    plain = logregr(tbl)
+    assert grouped.coef.shape == (1, 4)
+    np.testing.assert_allclose(np.asarray(grouped.coef[0]),
+                               np.asarray(plain.coef), rtol=1e-4, atol=1e-5)
+    assert int(grouped.n_iters[0]) == plain.n_iters
+
+
+def test_grouped_empty_group_is_finite(key):
+    """A group id with zero rows must produce a finite degenerate model
+    (zero coefficients), converge immediately, and not poison the others."""
+    tbl, _ = synthetic_classification_table(key, 2048, 4)
+    g = jnp.where(jnp.arange(2048) % 2 == 0, 0, 2).astype(jnp.int32)
+    grouped = logregr_grouped(tbl.with_column("g", g), "g", num_groups=3)
+    assert np.all(np.isfinite(np.asarray(grouped.coef)))
+    np.testing.assert_allclose(np.asarray(grouped.coef[1]), 0.0)
+    assert bool(grouped.converged[1])
+    sel = np.asarray(g) == 0
+    solo = logregr(Table.from_columns(
+        {"x": tbl["x"][sel], "y": tbl["y"][sel]}))
+    np.testing.assert_allclose(np.asarray(grouped.coef[0]),
+                               np.asarray(solo.coef), rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_kmeans_matches_solo(key):
+    from repro.methods.kmeans import kmeans_fit, kmeans_grouped
+    centers = jnp.array([[0., 0.], [5., 5.], [0., 5.]])
+    kk = jax.random.split(key, 4)
+    pts = centers[jax.random.randint(kk[0], (1800,), 0, 3)] \
+        + 0.3 * jax.random.normal(kk[1], (1800, 2))
+    g = (jnp.arange(1800) % 2).astype(jnp.int32)
+    seed = jax.random.normal(kk[2], (3, 2)) * 2.0
+    grouped = kmeans_grouped(Table.from_columns({"x": pts, "g": g}), "g", 3,
+                             init_centroids=seed, max_iters=30)
+    for i in range(2):
+        sel = np.asarray(g) == i
+        solo = kmeans_fit(Table.from_columns({"x": pts[sel]}), 3,
+                          init_centroids=seed, max_iters=30)
+        np.testing.assert_allclose(np.asarray(grouped.centroids[i]),
+                                   np.asarray(solo.centroids),
+                                   rtol=1e-3, atol=1e-3)
+        assert int(grouped.n_iters[i]) == solo.n_iters
+        assert bool(grouped.converged[i]) == solo.converged
+
+
+def test_grouped_linregr_matches_lstsq(key):
+    from repro.methods.linregr import linregr_grouped
+    tbl, _ = synthetic_regression_table(key, 3000, 6)
+    g = (jnp.arange(3000) % 3).astype(jnp.int32)
+    grouped = linregr_grouped(tbl.with_column("g", g), "g")
+    x = np.asarray(tbl["x"], np.float64)
+    y = np.asarray(tbl["y"], np.float64)
+    for i in range(3):
+        sel = np.asarray(g) == i
+        ref, *_ = np.linalg.lstsq(x[sel], y[sel], rcond=None)
+        np.testing.assert_allclose(np.asarray(grouped.coef[i]), ref,
+                                   rtol=1e-3, atol=1e-3)
+        assert float(grouped.num_rows[i]) == sel.sum()
+
+
+# -- pass-count accounting ----------------------------------------------------
+
+class _CountingIRLS(IRLSAggregate):
+    passes = 0
+
+    def transition(self, state, block, mask):
+        _CountingIRLS.passes += 1
+        return super().transition(state, block, mask)
+
+
+def test_host_mode_runs_one_pass_per_iteration(cls_table):
+    """The §3.1.2 contract: each driver round = exactly ONE data pass."""
+    tbl, _ = cls_table
+
+    class Task(IRLSTask):
+        def make_aggregate(self, state):
+            return _CountingIRLS(state["beta"])
+
+    _CountingIRLS.passes = 0
+    res = fit(Task(), tbl, max_iters=30, tol=1e-6, mode="host")
+    assert _CountingIRLS.passes == res.n_iters
+
+
+def test_two_pass_kmeans_runs_two_passes_per_iteration(key):
+    from repro.methods import kmeans as km
+
+    counts = {"bary": 0, "reassign": 0}
+
+    class CountBary(km.KMeansStoredAssignAggregate):
+        def transition(self, state, block, mask):
+            counts["bary"] += 1
+            return super().transition(state, block, mask)
+
+    class CountReassign(km.KMeansReassignAggregate):
+        def transition(self, state, block, mask):
+            counts["reassign"] += 1
+            return super().transition(state, block, mask)
+
+    pts = jax.random.normal(key, (512, 2))
+    tbl = Table.from_columns({"x": pts})
+    seed = jax.random.normal(jax.random.fold_in(key, 1), (4, 2))
+    task_cls = km.KMeansTwoPassTask
+
+    class Task(task_cls):
+        def iteration(self, state, run_pass):
+            out = run_pass(CountBary(state["cents"], state["assign"]))
+            upd = run_pass(CountReassign(out["centroids"], state["assign"]))
+            new = {"cents": out["centroids"], "assign": upd["assign"],
+                   "it": state["it"] + 1}
+            n = jnp.maximum(jnp.sum(out["counts"]), 1.0)
+            m = jnp.where(new["it"] <= 1, jnp.inf, upd["moved"] / n)
+            return new, {"sse": out["sse"], "counts": out["counts"]}, m
+
+    t = tbl.with_column("__row__", jnp.arange(512, dtype=jnp.int32))
+    res = fit(Task(seed), t, max_iters=5, tol=0.5 / 512, mode="host")
+    assert counts["bary"] == res.n_iters
+    assert counts["reassign"] == res.n_iters
+
+
+# -- streaming fused profile (ROADMAP workload) -------------------------------
+
+def test_profile_stream_matches_local(key):
+    from repro.methods.profile import profile, profile_stream
+    cols = {
+        "v": jax.random.normal(key, (5000,)),
+        "item": jax.random.randint(jax.random.fold_in(key, 1), (5000,),
+                                   0, 400),
+    }
+    tbl = Table.from_columns(cols)
+    streamed = profile_stream(
+        (dict(b.columns) for b in tbl.blocks(700)), distinct_counts=True)
+    local = profile(tbl, distinct_counts=True)
+    for col in cols:
+        for k, v in local[col].items():
+            np.testing.assert_allclose(
+                np.asarray(streamed[col][k]), np.asarray(v),
+                rtol=1e-4, atol=1e-4, err_msg=f"{col}.{k}")
+    assert "approx_distinct" in streamed["item"]
