@@ -1,0 +1,182 @@
+"""GROUP BY execution cost: the partitioned grouped-scan core vs the
+masked-vmap lowering.
+
+  * ``run_grouped`` on a skewed-G workload — the segment path folds all
+    groups in one O(n) blocked scan of group-aligned blocks; the masked
+    path scans the full table once per group (O(G·n)).  The speedup
+    should track G.
+  * ``fit_grouped`` under skewed convergence — groups converge at
+    spread-out rounds; the segment layout gather-compacts still-active
+    groups' blocks each round, so iters/sec stays high as the tail
+    thins, while the masked layout pays G full scans every round.
+
+``run()`` feeds the CSV harness (benchmarks/run.py); ``python -m
+benchmarks.bench_grouped [--json out.json]`` emits a JSON document for
+the bench trajectory and the CI smoke artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Table, fit_grouped, run_grouped
+from repro.methods.linregr import LinregrAggregate
+from repro.methods.logregr import IRLSTask
+
+
+def _skewed_groups(key, rows: int, groups: int) -> jax.Array:
+    """Zipf-ish group sizes: a few big segments, a long tail of small
+    ones (the shape that makes O(G·n) masking hurt most)."""
+    w = 1.0 / (jnp.arange(groups) + 1.0)
+    probs = w / jnp.sum(w)
+    return jax.random.choice(key, groups, (rows,), p=probs).astype(jnp.int32)
+
+
+def _grouped_table(key, rows: int, dims: int, groups: int) -> Table:
+    kx, kb, kg, ke = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (rows, dims))
+    b = jax.random.normal(kb, (dims,))
+    y = x @ b + 0.1 * jax.random.normal(ke, (rows,))
+    return Table.from_columns({"x": x, "y": y,
+                               "g": _skewed_groups(kg, rows, groups)})
+
+
+def _skewed_logistic_table(key, rows: int, dims: int, groups: int) -> Table:
+    """Skewed sizes AND skewed convergence: per-group coefficient scales
+    spread the IRLS iteration counts, so group models freeze at very
+    different rounds — the gather-compaction showcase."""
+    kx, kb, kg, ku = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (rows, dims))
+    g = _skewed_groups(kg, rows, groups)
+    b = jax.random.normal(kb, (groups, dims)) \
+        * (1.0 + (jnp.arange(groups)[:, None] % 7))
+    p = jax.nn.sigmoid(jnp.sum(x * b[g], -1))
+    y = (jax.random.uniform(ku, (rows,)) < p).astype(jnp.float32)
+    return Table.from_columns({"x": x, "y": y, "g": g})
+
+
+def _time(fn, reps: int) -> float:
+    """Min wall-clock over reps, after one untimed call.  run_grouped /
+    fit_grouped build a fresh jitted closure per call, so every rep pays
+    the same trace+dispatch overhead on BOTH strategies — the comparison
+    is apples-to-apples; the partitioning sort is hoisted out by passing
+    a prebuilt GroupedView where the strategy uses one."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench(rows: int = 200_000, dims: int = 8, groups: int = 64,
+          fit_groups: int = 64, max_iters: int = 25, reps: int = 3) -> dict:
+    key = jax.random.PRNGKey(0)
+    out: dict = {"config": {"rows": rows, "dims": dims, "groups": groups,
+                            "fit_groups": fit_groups,
+                            "max_iters": max_iters, "reps": reps}}
+
+    # --- one-pass: run_grouped linregr states, segment vs masked ---------
+    tbl = _grouped_table(key, rows, dims, groups)
+    view = tbl.group_by("g", groups)  # sort paid once, outside the timer
+    agg = LinregrAggregate()
+    one_pass = {}
+    for method in ("segment", "masked"):
+        s = _time(lambda m=method: run_grouped(agg, view, method=m), reps)
+        one_pass[method] = {"seconds": s,
+                            "rows_per_sec": rows / s}
+    one_pass["segment_speedup"] = \
+        one_pass["masked"]["seconds"] / one_pass["segment"]["seconds"]
+    out["run_grouped"] = one_pass
+
+    # --- iterative: fit_grouped IRLS under skewed convergence ------------
+    ftbl = _skewed_logistic_table(jax.random.fold_in(key, 1), rows, dims,
+                                  fit_groups)
+    fit_stats = {}
+    rounds = {}
+    for layout in ("segment", "masked"):
+        def one(la=layout):
+            return fit_grouped(IRLSTask(), ftbl, "g", fit_groups,
+                               max_iters=max_iters, tol=1e-6, layout=la)
+        res = one()  # compile + capture diagnostics
+        t0 = time.perf_counter()
+        res = one()
+        s = time.perf_counter() - t0
+        rounds[layout] = int(res.n_iters.max())
+        fit_stats[layout] = {"seconds": s,
+                             "iters_per_sec": rounds[layout] / s}
+        if res.stats["layout"] == "segment":
+            fit_stats[layout]["blocks"] = res.stats["blocks"]
+            fit_stats[layout]["blocks_full_scan"] = \
+                res.stats["blocks_full_scan"]
+            fit_stats[layout]["n_iters_min_max"] = \
+                [int(res.n_iters.min()), int(res.n_iters.max())]
+    fit_stats["segment_speedup"] = \
+        fit_stats["masked"]["seconds"] / fit_stats["segment"]["seconds"]
+    out["fit_grouped"] = fit_stats
+
+    # --- iters/sec vs G (segment layout scaling) -------------------------
+    sweep = []
+    for g_sweep in (max(2, fit_groups // 4), fit_groups, 4 * fit_groups):
+        t = _skewed_logistic_table(jax.random.fold_in(key, g_sweep), rows,
+                                   dims, g_sweep)
+
+        def one_sweep(tt=t, gg=g_sweep):
+            return fit_grouped(IRLSTask(), tt, "g", gg,
+                               max_iters=max_iters, tol=1e-6,
+                               layout="segment")
+        r = one_sweep()
+        t0 = time.perf_counter()
+        r = one_sweep()
+        s = time.perf_counter() - t0
+        sweep.append({"groups": g_sweep, "seconds": s,
+                      "iters_per_sec": int(r.n_iters.max()) / s})
+    out["fit_grouped_vs_G"] = sweep
+    return out
+
+
+def run(rows: int = 200_000, groups: int = 64, reps: int = 3):
+    """CSV rows for benchmarks/run.py: (name, us_per_call, derived)."""
+    r = bench(rows=rows, groups=groups, reps=reps)
+    res = []
+    for method in ("segment", "masked"):
+        e = r["run_grouped"][method]
+        res.append((f"run_grouped_{method}", e["seconds"] * 1e6,
+                    f"rows_per_sec={e['rows_per_sec']:.0f}"))
+    res.append(("run_grouped_segment_speedup",
+                r["run_grouped"]["segment_speedup"], ""))
+    for layout in ("segment", "masked"):
+        e = r["fit_grouped"][layout]
+        res.append((f"fit_grouped_{layout}", e["seconds"] * 1e6,
+                    f"iters_per_sec={e['iters_per_sec']:.2f}"))
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the JSON document here (default: stdout)")
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--groups", type=int, default=64)
+    ap.add_argument("--fit-groups", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=25)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    doc = bench(rows=args.rows, groups=args.groups,
+                fit_groups=args.fit_groups, max_iters=args.iters,
+                reps=args.reps)
+    text = json.dumps(doc, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.json}")
+    else:
+        print(text)

@@ -2,7 +2,6 @@
 
 - Table          — sharded pytree-of-columns (macro-programming substrate)
 - Aggregate      — the (init, transition, merge, final) UDA pattern
-- run_local / run_sharded / run_stream / run_grouped — execution engines
 - FusedAggregate / run_many — shared-scan execution: N heterogeneous
   aggregates (mixed merge combinators, including generic-merge) packed
   into one state pytree and folded in ONE data pass.  ``run_many`` picks
@@ -11,6 +10,36 @@
   computes every column's summary AND every FM distinct-count in a single
   scan.  Amortizing data movement across aggregates is the paper's §4.1
   two-phase speedup argument applied one level up.
+
+The engine matrix — every workload is (execution engine) x (pass shape):
+
+  ============  =========================  ===============================
+  engine        one-pass (Aggregate)       iterative (IterativeTask)
+  ============  =========================  ===============================
+  local         run_local                  fit(engine="local")
+  sharded       run_sharded                fit(engine="sharded")
+  stream        run_stream                 fit_stream
+  grouped       run_grouped                fit_grouped
+  ============  =========================  ===============================
+
+- local: single-shard blocked ``lax.scan`` fold (PostgreSQL mode).
+- sharded: ``shard_map`` over the mesh's row axes — local fold, then the
+  merge-combinator collective (Greenplum segments; for iterative fits the
+  WHOLE loop lives inside one shard_map program).
+- stream: host-side block iterator with donated device state (the
+  out-of-core path); empty streams raise ValueError.
+- grouped: the partitioned grouped-scan core.  ``Table.group_by`` sorts
+  rows by group id ONCE into a ``GroupedView`` (contiguous segments +
+  boundaries); ``aligned_blocks`` pads each segment to whole row blocks
+  so each block holds exactly one group, and ``segment_fold`` folds ALL
+  groups in a single O(n) blocked scan, segment-merging each block state
+  into its group's accumulator with the aggregate's own merge combinators
+  (``Aggregate.segment_ops``).  ``fit_grouped`` additionally
+  gather-compacts the blocks of still-active groups every round, so
+  skewed-convergence tails cost O(active rows) instead of G full scans.
+  Generic-merge aggregates and multi-statement tasks fall back to the
+  masked-vmap path (O(G·n), exact for any mask-honoring aggregate).
+
 - IterativeTask + fit / fit_grouped / fit_stream — the unified iterative
   executor (§3.1.2 driver pattern, Bismarck-style): ONE controller loop
   runs any registered task on all four engines, with a compiled
@@ -29,6 +58,7 @@ TPU, jnp reference elsewhere, interpret-mode Pallas on request).
 """
 
 from .table import (
+    GroupedView,
     Table,
     synthetic_classification_table,
     synthetic_regression_table,
@@ -44,6 +74,7 @@ from .aggregates import (
     run_many,
     run_sharded,
     run_stream,
+    segment_fold,
 )
 from .iterative import (
     FitResult,
@@ -72,9 +103,10 @@ from .convex import (
 from .templates import ProfileAggregate, map_columns, one_hot_encode
 
 __all__ = [
-    "Table", "Aggregate", "FusedAggregate", "MERGE_SUM", "MERGE_MAX",
-    "MERGE_MIN",
+    "Table", "GroupedView", "Aggregate", "FusedAggregate", "MERGE_SUM",
+    "MERGE_MAX", "MERGE_MIN",
     "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",
+    "segment_fold",
     "IterativeTask", "FitResult", "fit", "fit_grouped", "fit_stream",
     "IterationResult", "host_driver", "device_driver", "counted_driver",
     "relative_change", "ConvexProgram", "GradientAggregate",

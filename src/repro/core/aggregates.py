@@ -20,8 +20,11 @@ Execution engines provided here:
   segment model, and the engine whose speedup the paper measures.
 * :func:`run_stream`      — host-side streaming fold with donated device
   state (the out-of-core path; §2.1's "entire data sets" argument).
-* :func:`run_grouped`     — GROUP BY execution for sum-decomposable
-  aggregates via segment reduction (the paper's grouped linregr).
+* :func:`run_grouped`     — GROUP BY execution (the paper's grouped
+  linregr) on the partitioned grouped-scan core: rows are sorted into
+  group-aligned blocks once and ALL groups fold in a single O(n) scan
+  (:func:`segment_fold`), with a masked-vmap fallback for generic-merge
+  aggregates.
 
 Shared-scan composition: :class:`FusedAggregate` packs N heterogeneous
 aggregates (each with its own merge combinators, including generic-merge)
@@ -47,7 +50,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map as _compat_shard_map
-from .table import Table, Columns
+from .table import GroupedView, Table, Columns
 
 S = TypeVar("S")  # transition state pytree
 R = TypeVar("R")  # result pytree
@@ -94,6 +97,16 @@ class Aggregate:
         if isinstance(self.merge_ops, str):
             return jax.tree.map(lambda _: self.merge_ops, state)
         return self.merge_ops
+
+    def segment_ops(self, state: S):
+        """Per-leaf merge-combinator tree for segment (scatter) reduction,
+        or None when this aggregate is only mergeable through its generic
+        ``merge`` and cannot take the partitioned grouped path.  Consult
+        AFTER ``init`` has run — schema-templated aggregates (e.g.
+        ``ProfileAggregate``) synthesize ``merge_ops`` there."""
+        if self.merge_ops is None:
+            return None
+        return self._merge_ops_tree(state)
 
     # Mesh-wide merge inside shard_map.
     def mesh_merge(self, state: S, axes: tuple[str, ...]) -> S:
@@ -155,6 +168,12 @@ class FusedAggregate(Aggregate):
     def mesh_merge(self, state, axes):
         return tuple(a.mesh_merge(s, axes)
                      for a, s in zip(self.aggs, state))
+
+    def segment_ops(self, state):
+        ops = tuple(a.segment_ops(s) for a, s in zip(self.aggs, state))
+        if any(o is None for o in ops):
+            return None  # one generic-merge member poisons the fused pass
+        return ops
 
     def final(self, state):
         outs = tuple(a.final(s) for a, s in zip(self.aggs, state))
@@ -295,7 +314,12 @@ def run_stream(agg: Aggregate, blocks: Iterable[Columns]) -> Any:
     host only schedules.
     """
     it = iter(blocks)
-    first = {k: jnp.asarray(v) for k, v in next(it).items()}
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("run_stream: empty block stream — at least one "
+                         "block is required to seed the fold state") from None
+    first = {k: jnp.asarray(v) for k, v in first.items()}
 
     @partial(jax.jit, donate_argnums=(0,))
     def step(state, block, mask):
@@ -315,30 +339,185 @@ def run_stream(agg: Aggregate, blocks: Iterable[Columns]) -> Any:
 
 
 # ---------------------------------------------------------------------------
-# GROUP BY execution.
+# GROUP BY execution — the partitioned grouped-scan core.
 # ---------------------------------------------------------------------------
 
-def run_grouped(agg: Aggregate, table: Table, group_col: str, num_groups: int,
-                *, jit: bool = True) -> Any:
+# Default row-block size for the segment path: bounds the (block, state)
+# per-row intermediates the singleton transitions materialize.
+_SEGMENT_BLOCK = 4096
+
+
+def _scatter_leaf(op: str, acc, idx, vals):
+    """Segment-merge one state leaf: fold the per-row states ``vals``
+    (leading row axis, aligned with segment ids ``idx``) into the
+    per-group accumulator ``acc`` with the leaf's merge combinator."""
+    if op == MERGE_SUM:
+        return acc.at[idx].add(vals)
+    if op == MERGE_MAX:
+        return acc.at[idx].max(vals)
+    if op == MERGE_MIN:
+        return acc.at[idx].min(vals)
+    raise ValueError(f"unknown merge op {op!r}")
+
+
+def probe_segment_ops(agg: Aggregate, columns: Columns):
+    """Merge-combinator tree of ``agg`` over ``columns``' schema, or None
+    when the aggregate is not segment-reducible (generic merge).  Runs
+    ``init`` abstractly so schema-templated aggregates synthesize their
+    ops without touching data."""
+    spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in columns.items()}
+    state_s = jax.eval_shape(agg.init, spec)
+    return agg.segment_ops(state_s)
+
+
+def segment_block_size(n_rows: int, num_groups: int,
+                       block_size: int | None = None) -> int:
+    """Block size for the group-aligned layout: near the average segment
+    (padding overhead is one partial block per group), power-of-two,
+    clamped to [64, _SEGMENT_BLOCK].  An explicit ``block_size`` wins."""
+    if block_size is not None:
+        return max(1, int(block_size))
+    avg = max(1, -(-n_rows // max(1, num_groups)))
+    return max(64, min(_SEGMENT_BLOCK, 1 << (avg - 1).bit_length()))
+
+
+def segment_fold(make_agg, group_states, ops, columns: Columns,
+                 valid: jax.Array, block_gids: jax.Array,
+                 num_groups: int) -> Any:
+    """Fold EVERY group's state in ONE O(n) blocked scan (jit-traceable).
+
+    Consumes the group-aligned layout of
+    :meth:`~repro.core.table.GroupedView.aligned_blocks`: each block holds
+    rows of exactly one group, so the aggregate's REAL block transition
+    runs per block (the same MXU-shaped update as the solo fold, with
+    padding rows masked out) and the block state is segment-merged into
+    the stacked ``(num_groups, ...)`` accumulators with each leaf's merge
+    combinator (``ops``, from :meth:`Aggregate.segment_ops`).  Correctness
+    rests on exactly the contract :func:`run_sharded` already imposes:
+    folding a row partition from init and merging leaf-wise must equal the
+    sequential fold, with init the merge identity (so empty groups keep
+    their init state).
+
+    ``make_agg(state_g)`` builds the (possibly per-group-parameterized)
+    aggregate; pass ``lambda _: agg`` with dummy states for a uniform
+    aggregate.
+    """
+    inits = jax.vmap(lambda s: make_agg(s).init(columns))(group_states)
+    nb = block_gids.shape[0]
+    if nb == 0:
+        return inits
+    n2 = next(iter(columns.values())).shape[0]
+    bs = n2 // nb
+    blocks = {k: v.reshape((nb, bs) + v.shape[1:]) for k, v in columns.items()}
+    vmask = valid.reshape(nb, bs)
+
+    def step(acc, xs):
+        blk, bm, g = xs
+        s_g = jax.tree.map(lambda s: s[g], group_states)
+        a = make_agg(s_g)
+        bstate = a.transition(a.init(blk), blk, bm)
+        acc = jax.tree.map(
+            lambda op, al, bl: _scatter_leaf(op, al, g[None], bl[None]),
+            ops, acc, bstate)
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, inits, (blocks, vmask, block_gids))
+    return acc
+
+
+def run_grouped(agg: Aggregate, table, group_col: str | None = None,
+                num_groups: int | None = None, *,
+                block_size: int | None = None,
+                mask: jax.Array | None = None,
+                method: str = "auto", jit: bool = True) -> Any:
     """Grouped aggregation (``SELECT ..., agg(...) GROUP BY g``).
 
-    Implemented by vmapping the masked fold over group ids — every group
-    sees the full block with a per-group validity mask.  Exact for any
-    aggregate honoring the mask contract; cost is O(G · n) which matches the
-    one-hot matmul lowering XLA emits for segment reductions.
-    """
+    ``table`` is either a :class:`Table` — grouped by its ``group_col``
+    column — or a prebuilt :class:`~repro.core.table.GroupedView`
+    (``group_col`` ignored), so multi-pass grouped methods pay the
+    partitioning sort once and share it across scans.
 
-    def go(columns):
-        gids = columns[group_col].astype(jnp.int32)
-        data = {k: v for k, v in columns.items() if k != group_col}
+    Two execution strategies share the engine:
+
+    * ``method="segment"`` — the partitioned grouped-scan core: rows are
+      permuted into group-aligned blocks once (:meth:`Table.group_by` +
+      ``aligned_blocks``) and ALL groups fold in a single O(n) blocked
+      scan with a per-block segment merge (:func:`segment_fold`).
+      Requires leaf-wise merge combinators (``agg.segment_ops``).
+    * ``method="masked"`` — the fallback for generic-merge aggregates:
+      vmap the blocked masked fold over group ids; every group scans the
+      full table (O(G·n)), exact for any aggregate honoring the mask
+      contract.
+
+    ``method="auto"`` picks segment whenever the aggregate supports it.
+    ``mask`` is a base row filter applied before grouping (like
+    ``run_local``), always given in the ORIGINAL table's row order;
+    ``num_groups`` defaults to ``max(gid) + 1`` (the view's group count).
+    """
+    view = table if isinstance(table, GroupedView) else None
+    if view is not None:
+        if num_groups is not None and num_groups != view.num_groups:
+            raise ValueError(f"run_grouped: num_groups={num_groups} "
+                             f"disagrees with the view's {view.num_groups}")
+        num_groups = view.num_groups
+        data = dict(view.table.columns)
+    else:
+        if group_col is None:
+            raise ValueError("run_grouped: group_col is required when "
+                             "grouping a Table (or pass a GroupedView)")
+        if num_groups is None:
+            num_groups = int(jax.device_get(
+                jnp.max(table[group_col].astype(jnp.int32)))) + 1
+        data = {k: v for k, v in table.columns.items() if k != group_col}
+    G = num_groups
+
+    ops = None
+    if method in ("auto", "segment"):
+        ops = probe_segment_ops(agg, data)
+    if method == "auto":
+        method = "segment" if ops is not None else "masked"
+
+    if method == "segment":
+        if ops is None:
+            raise ValueError(
+                "run_grouped: method='segment' needs leaf-wise merge "
+                "combinators (agg.segment_ops() returned None); use "
+                "method='masked' for generic-merge aggregates")
+        if view is None:
+            view = table.group_by(group_col, G)
+        pmask = None if mask is None else view.permute(mask)
+        bs = segment_block_size(view.n_rows, G, block_size)
+        cols_a, valid_a, bgids = view.aligned_blocks(bs, pmask)
+        dummy_states = jnp.zeros((G,), jnp.int32)
+
+        def go_segment(columns, valid, bgids):
+            states = segment_fold(lambda _s: agg, dummy_states, ops,
+                                  columns, valid, bgids, G)
+            return jax.vmap(agg.final)(states)
+
+        fn = jax.jit(go_segment) if jit else go_segment
+        return fn(cols_a, valid_a, bgids)
+
+    if method != "masked":
+        raise ValueError(f"unknown method {method!r} "
+                         "(use 'auto', 'segment' or 'masked')")
+
+    if view is not None:
+        gids = view.gids
+        base_mask = None if mask is None else view.permute(mask)
+    else:
+        gids = table[group_col].astype(jnp.int32)
+        base_mask = mask
+
+    def go_masked(data, gids, mask):
+        base = jnp.ones(gids.shape, jnp.bool_) if mask is None else mask
 
         def per_group(g):
-            mask = gids == g
-            state = agg.init(data)
-            state = agg.transition(state, data, mask)
+            state = _blocked_fold(agg, data, (gids == g) & base, block_size)
             return agg.final(state)
 
-        return jax.vmap(per_group)(jnp.arange(num_groups))
+        return jax.vmap(per_group)(jnp.arange(G))
 
-    fn = jax.jit(go) if jit else go
-    return fn(dict(table.columns))
+    fn = jax.jit(go_masked) if jit else go_masked
+    return fn(data, gids, base_mask)

@@ -58,7 +58,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .aggregates import (
-    Aggregate, _blocked_fold, run_local, run_sharded, run_stream,
+    Aggregate, _blocked_fold, probe_segment_ops, run_local, run_sharded,
+    run_stream, segment_block_size, _scatter_leaf,
 )
 from .compat import shard_map as _compat_shard_map
 from .table import Table, Columns
@@ -193,7 +194,9 @@ class FitResult:
     stacked per-iteration :meth:`IterativeTask.trace_record` values (leading
     axis = iterations actually run; for grouped fits the group axis leads).
     ``n_iters``/``converged`` are scalars — per-group vectors for
-    :func:`fit_grouped`.
+    :func:`fit_grouped`.  ``stats`` carries engine diagnostics (grouped
+    fits record the layout, per-round active-row counts and total row
+    blocks scanned); None for engines that report nothing.
     """
 
     state: Any
@@ -201,6 +204,7 @@ class FitResult:
     n_iters: Any
     converged: Any
     trace: Any
+    stats: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -376,7 +380,12 @@ def fit_stream(task: IterativeTask,
     if warm_start is not None:
         state0 = jax.tree.map(jnp.asarray, warm_start)
     else:
-        first = next(iter(blocks_factory()))
+        try:
+            first = next(iter(blocks_factory()))
+        except StopIteration:
+            raise ValueError("fit_stream: blocks_factory() produced no "
+                             "blocks — at least one block is required to "
+                             "shape the driver state") from None
         state0 = jax.tree.map(
             jnp.asarray,
             task.init_state({k: jnp.asarray(v) for k, v in first.items()}))
@@ -392,18 +401,34 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
                 num_groups: int | None = None, *, max_iters: int = 100,
                 tol: float | None = 1e-6, block_size: int | None = None,
                 mask: jax.Array | None = None, warm_start: Any = None,
-                jit: bool = True) -> FitResult:
+                layout: str = "auto", jit: bool = True) -> FitResult:
     """Fit one model per group of ``key_col`` — MADlib's ``GROUP BY``
     model fitting (the paper's grouped linregr, §4.1) generalized to every
     registered task.
 
-    Every iteration executes the task's pass for ALL still-active groups
-    against the full table with per-group validity masks (cost O(G·n) per
-    round, the same lowering as :func:`run_grouped`); converged groups are
-    frozen.  Returns a :class:`FitResult` whose ``state``/``result``/
-    ``trace`` carry a leading group axis and whose ``n_iters``/
-    ``converged`` are per-group vectors.  ``warm_start``, when given, must
-    already be stacked per group.
+    Two layouts share the controller:
+
+    * ``layout="segment"`` — the partitioned grouped-scan core: rows are
+      permuted into group-aligned blocks once (:meth:`Table.group_by` +
+      ``aligned_blocks``; each block holds rows of exactly one group);
+      every round gather-compacts the blocks of still-ACTIVE groups and
+      folds only those through the task's real block transition, segment-
+      merging each block state into its group's accumulator.  Per-round
+      cost is O(active rows), so the tail of a skewed-convergence fit
+      tracks the groups still iterating instead of G full-table scans.
+      Requires the task's default single-scan ``iteration`` and leaf-wise
+      merge combinators.
+    * ``layout="masked"`` — the fallback (multi-statement ``iteration``
+      overrides, generic-merge aggregates): every round vmaps the task's
+      pass over per-group validity masks against the full table (O(G·n)).
+
+    ``layout="auto"`` picks segment whenever the task supports it.
+    Converged groups are frozen under both layouts.  Returns a
+    :class:`FitResult` whose ``state``/``result``/``trace`` carry a
+    leading group axis, whose ``n_iters``/``converged`` are per-group
+    vectors, and whose ``stats`` records the layout plus (segment) the
+    per-round active-row counts and total blocks scanned.  ``warm_start``,
+    when given, must already be stacked per group.
     """
     cols = dict(table.columns)
     gids = cols.pop(key_col).astype(jnp.int32)
@@ -418,6 +443,35 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
         states0 = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), s0)
 
+    if layout == "auto":
+        layout = "segment" if _segment_task_ok(task, states0, cols) \
+            else "masked"
+    if layout == "segment":
+        return _fit_grouped_segment(task, table, key_col, G, states0,
+                                    max_iters, tol, block_size, mask, jit)
+    if layout != "masked":
+        raise ValueError(f"unknown layout {layout!r} "
+                         "(use 'auto', 'segment' or 'masked')")
+    return _fit_grouped_masked(task, cols, gids, G, states0, max_iters,
+                               tol, block_size, mask, jit)
+
+
+def _segment_task_ok(task: IterativeTask, states0, cols) -> bool:
+    """Segment layout needs the default single-scan iteration (multi-
+    statement rounds drive the pass runner themselves) and an aggregate
+    with leaf-wise merge combinators."""
+    if type(task).iteration is not IterativeTask.iteration:
+        return False
+    try:
+        agg = task.make_aggregate(jax.tree.map(lambda x: x[0], states0))
+        return probe_segment_ops(agg, cols) is not None
+    except Exception:
+        return False
+
+
+def _fit_grouped_masked(task, cols, gids, G, states0, max_iters, tol,
+                        block_size, mask, jit_):
+    """Masked-vmap fallback: every group folds the full table per round."""
     base_mask = mask if mask is not None \
         else jnp.ones((next(iter(cols.values())).shape[0],), jnp.bool_)
     eff_tol = jnp.float32(jnp.inf if tol is None else tol)
@@ -472,7 +526,7 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
         results = jax.vmap(task.finalize)(states, aux)
         return states, results, m_vec, it_vec, trace
 
-    fn = jax.jit(go) if jit else go
+    fn = jax.jit(go) if jit_ else go
     states, results, m_vec, it_vec, trace = fn(cols, gids, base_mask, states0)
     n_iters = np.asarray(it_vec)
     converged = np.zeros((G,), bool) if tol is None \
@@ -480,4 +534,143 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
     # per-group traces, truncated to the longest-running group
     n_max = int(n_iters.max()) if G else 0
     trace = jax.tree.map(lambda t: np.asarray(t[:, :n_max]), trace)
-    return FitResult(states, results, n_iters, converged, trace)
+    return FitResult(states, results, n_iters, converged, trace,
+                     {"layout": "masked"})
+
+
+def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
+                         block_size, mask, jit_):
+    """Partitioned layout: one segment scan over the gather-compacted
+    blocks of still-active groups per round."""
+    if type(task).iteration is not IterativeTask.iteration:
+        raise ValueError("fit_grouped: layout='segment' requires the "
+                         "default single-scan iteration(); multi-statement "
+                         "tasks need layout='masked'")
+    view = table.group_by(key_col, G)
+    n = view.n_rows
+
+    agg0 = task.make_aggregate(jax.tree.map(lambda x: x[0], states0))
+    ops = probe_segment_ops(agg0, dict(view.table.columns))
+    if ops is None:
+        raise ValueError("fit_grouped: layout='segment' needs leaf-wise "
+                         "merge combinators; use layout='masked'")
+
+    # Group-aligned blocked layout, built once: each block holds rows of
+    # exactly one group, so a round gather-compacts whole blocks.
+    pmask = None if mask is None else view.permute(mask)
+    bs = segment_block_size(n, G, block_size)
+    cols, valid, bgids = view.aligned_blocks(bs, pmask)
+    NB = int(bgids.shape[0])
+    counts = view.counts
+    eff_tol = jnp.float32(jnp.inf if tol is None else tol)
+
+    def go(cols, valid, bgids, counts, states0):
+        def round_core(states, active):
+            """One driver round over the compacted blocks of active
+            groups."""
+            act_blk = active[bgids] if NB else jnp.zeros((0,), jnp.bool_)
+            nb = jnp.sum(act_blk.astype(jnp.int32))
+            m_rows = jnp.sum(counts * active.astype(jnp.int32))
+            # gather-compact: indices of active blocks, packed to the front
+            pos = jnp.cumsum(act_blk.astype(jnp.int32)) - 1
+            blk_idx = jnp.zeros((max(NB, 1),), jnp.int32).at[
+                jnp.where(act_blk, pos, NB)
+            ].set(jnp.arange(NB, dtype=jnp.int32), mode="drop")
+
+            inits = jax.vmap(
+                lambda s: task.make_aggregate(s).init(cols))(states)
+
+            def blk_body(carry):
+                b, acc = carry
+                j = blk_idx[b]
+                blk = jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, j * bs, bs),
+                    cols)
+                bm = jax.lax.dynamic_slice_in_dim(valid, j * bs, bs)
+                g = bgids[j]
+                s_g = jax.tree.map(lambda s: s[g], states)
+                a = task.make_aggregate(s_g)
+                bstate = a.transition(a.init(blk), blk, bm)
+                acc = jax.tree.map(
+                    lambda op, al, bl: _scatter_leaf(op, al, g[None],
+                                                     bl[None]),
+                    ops, acc, bstate)
+                return b + 1, acc
+
+            _, merged = jax.lax.while_loop(
+                lambda c: c[0] < nb, blk_body, (jnp.int32(0), inits))
+
+            def g_post(s, agg_state):
+                a = task.make_aggregate(s)
+                out = a.final(agg_state)
+                new = task.update(s, out)
+                mm = task.metric(s, new, out)
+                return new, out, jnp.asarray(mm, jnp.float32), \
+                    task.trace_record(new, out, mm)
+
+            new, aux, m_new, rec = jax.vmap(g_post)(states, merged)
+            return new, aux, m_new, rec, m_rows, nb
+
+        state_s = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), states0)
+        _, aux_s, _, rec_s, *_ = jax.eval_shape(
+            round_core, states0, jnp.ones((G,), jnp.bool_))
+        trace0 = jax.tree.map(
+            lambda s: jnp.zeros((s.shape[0], max_iters) + s.shape[1:],
+                                s.dtype), rec_s)
+
+        def cond(c):
+            i, m_vec = c[2], c[3]
+            return jnp.logical_and(i < max_iters, jnp.any(m_vec >= eff_tol))
+
+        def body(c):
+            states, aux, i, m_vec, it_vec, trace, blk_tot, act_tr = c
+            active = m_vec >= eff_tol
+            new, aux_new, m_new, rec, m_rows, nb = round_core(states, active)
+
+            def sel(n_, o_):
+                act = active.reshape((G,) + (1,) * (n_.ndim - 1))
+                return jnp.where(act, n_, o_)
+
+            states = jax.tree.map(sel, _cast_like(new, state_s), states)
+            aux = jax.tree.map(sel, _cast_like(aux_new, aux_s), aux)
+            trace = jax.tree.map(
+                lambda t, r: t.at[:, i].set(
+                    jnp.where(active.reshape((G,) + (1,) * (r.ndim - 1)),
+                              r, t[:, i])),
+                trace, _cast_like(rec, rec_s))
+            if tol is not None:  # counted mode keeps every group active
+                m_vec = jnp.where(active, m_new, m_vec)
+            it_vec = it_vec + active.astype(jnp.int32)
+            return (states, aux, i + 1, m_vec, it_vec, trace,
+                    blk_tot + nb, act_tr.at[i].set(m_rows))
+
+        init = (states0, _zeros_of(aux_s), jnp.int32(0),
+                jnp.full((G,), jnp.inf, jnp.float32),
+                jnp.zeros((G,), jnp.int32), trace0, jnp.int32(0),
+                jnp.zeros((max_iters,), jnp.int32))
+        states, aux, n_rounds, m_vec, it_vec, trace, blk_tot, act_tr = \
+            jax.lax.while_loop(cond, body, init)
+        results = jax.vmap(task.finalize)(states, aux)
+        return (states, results, m_vec, it_vec, trace, n_rounds, blk_tot,
+                act_tr)
+
+    fn = jax.jit(go) if jit_ else go
+    (states, results, m_vec, it_vec, trace, n_rounds, blk_tot, act_tr) = fn(
+        cols, valid, bgids, counts, states0)
+    n_iters = np.asarray(it_vec)
+    converged = np.zeros((G,), bool) if tol is None \
+        else np.asarray(m_vec) < tol
+    # per-group traces, truncated to the longest-running group
+    n_max = int(n_iters.max()) if G else 0
+    trace = jax.tree.map(lambda t: np.asarray(t[:, :n_max]), trace)
+    n_rounds = int(n_rounds)
+    stats = {
+        "layout": "segment",
+        "block_size": bs,
+        "rounds": n_rounds,
+        "blocks": int(blk_tot),
+        "blocks_full_scan": n_rounds * NB,
+        "active_rows": np.asarray(act_tr)[:n_rounds],
+    }
+    return FitResult(states, results, n_iters, converged, trace, stats)

@@ -136,6 +136,108 @@ class Table:
         }
         return Table(cols, self.mesh, self.row_axes)
 
+    def group_by(self, key_col: str, num_groups: int | None = None
+                 ) -> "GroupedView":
+        """Partition rows by an integer group-id column (sort once, scan many).
+
+        Returns a :class:`GroupedView`: the data columns permuted so each
+        group's rows form one contiguous segment, plus the segment
+        boundaries.  This is Greenplum's "redistribute by grouping key"
+        materialized once up front — every grouped engine
+        (``run_grouped`` / ``fit_grouped``) then folds the partitioned
+        layout in O(n) instead of re-masking the full table per group.
+
+        Out-of-range ids (``< 0`` or ``>= num_groups``) keep their rows in
+        the permuted table but outside every segment; grouped engines
+        ignore them, matching the masked semantics of ``gid == g``.
+        """
+        gids = self.columns[key_col].astype(jnp.int32)
+        if num_groups is None:
+            num_groups = int(jax.device_get(jnp.max(gids))) + 1
+        perm = jnp.argsort(gids, stable=True)
+        sorted_gids = gids[perm]
+        offsets = jnp.searchsorted(
+            sorted_gids, jnp.arange(num_groups + 1, dtype=jnp.int32)
+        ).astype(jnp.int32)
+        data = {k: v[perm] for k, v in self.columns.items() if k != key_col}
+        return GroupedView(
+            Table(data, self.mesh, self.row_axes), sorted_gids, perm,
+            num_groups, jnp.diff(offsets), offsets,
+        )
+
+
+@dataclasses.dataclass
+class GroupedView:
+    """Partitioned ``GROUP BY`` layout of a :class:`Table`.
+
+    ``table`` holds the data columns (group-id column stripped) with rows
+    permuted so group ``g`` occupies the contiguous segment
+    ``offsets[g]:offsets[g + 1]``; ``gids`` is the sorted id column,
+    ``perm`` maps partitioned position -> original row, and ``counts``
+    is rows per group.  Built by :meth:`Table.group_by`; the sort is paid
+    once and shared by every subsequent grouped scan.
+    """
+
+    table: Table
+    gids: jax.Array            # (n,) int32, sorted ascending
+    perm: jax.Array            # (n,) int32, partitioned position -> orig row
+    num_groups: int
+    counts: jax.Array          # (G,) rows per group
+    offsets: jax.Array         # (G + 1,) segment boundaries
+
+    @property
+    def n_rows(self) -> int:
+        return self.table.n_rows
+
+    def select(self, *names: str) -> "GroupedView":
+        """Subset of data columns sharing this view's partitioning (the
+        sort is NOT re-paid)."""
+        return GroupedView(self.table.select(*names), self.gids, self.perm,
+                           self.num_groups, self.counts, self.offsets)
+
+    def permute(self, rows: jax.Array) -> jax.Array:
+        """Bring a row-aligned array (e.g. a base mask) into the
+        partitioned row order."""
+        return jnp.asarray(rows)[self.perm]
+
+    def aligned_blocks(self, block_size: int,
+                       base_mask: jax.Array | None = None):
+        """Group-aligned blocked layout: every group's segment zero-padded
+        to a whole number of ``block_size`` row blocks, so each block holds
+        rows of exactly ONE group.
+
+        Returns ``(columns, valid, block_gids)``: columns with leading axis
+        ``n_blocks * block_size``, a validity mask over real (and
+        base-mask-passing) rows, and the single group id of each block.
+        Empty groups get no blocks; out-of-range ids fall outside every
+        segment and are dropped.  ``base_mask`` must already be in
+        partitioned order (see :meth:`permute`).  Padding overhead is
+        bounded by ``num_groups * block_size`` rows, so callers pick
+        ``block_size`` near the typical segment size.
+        """
+        bs = int(block_size)
+        counts = np.asarray(jax.device_get(self.counts))
+        starts = np.asarray(jax.device_get(self.offsets))[:-1]
+        bpg = -(-counts // bs)  # blocks per group (0 for empty groups)
+        block_gids = jnp.asarray(
+            np.repeat(np.arange(self.num_groups), bpg).astype(np.int32))
+        ppg = bpg * bs          # padded rows per group
+        n2 = int(ppg.sum())
+        if n2 == 0:
+            cols = {k: v[:0] for k, v in self.table.columns.items()}
+            return cols, jnp.zeros((0,), jnp.bool_), block_gids
+        grp = np.repeat(np.arange(self.num_groups), ppg)
+        out_start = np.concatenate([[0], np.cumsum(ppg)])[:-1]
+        local = np.arange(n2) - out_start[grp]
+        valid_np = local < counts[grp]
+        src = jnp.asarray(
+            np.where(valid_np, starts[grp] + local, 0).astype(np.int32))
+        cols = {k: v[src] for k, v in self.table.columns.items()}
+        valid = jnp.asarray(valid_np)
+        if base_mask is not None:
+            valid = valid & jnp.asarray(base_mask)[src]
+        return cols, valid, block_gids
+
 
 def synthetic_regression_table(
     key: jax.Array, n_rows: int, n_vars: int, noise: float = 0.1,

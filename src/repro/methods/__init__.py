@@ -20,6 +20,13 @@ one of them the compiled while-loop fast path, sharded and streaming
 execution, warm starts, and per-group (GROUP BY) fitting via
 ``fit_grouped`` (``logregr_grouped`` / ``linregr_grouped`` /
 ``kmeans_grouped``).
+
+GROUP BY execution goes through the partitioned grouped-scan core
+(``core.aggregates.run_grouped`` / ``core.iterative.fit_grouped``) —
+methods never build their own per-group equality masks over the id
+column (CI greps for it).  One-pass grouped forms:
+``naive_bayes_grouped``, ``quantiles_grouped``,
+``countmin_sketch_grouped``, ``fm_distinct_count_grouped``.
 """
 
 from . import (  # noqa: F401

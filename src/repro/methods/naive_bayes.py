@@ -13,7 +13,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import (
+    Aggregate, MERGE_SUM, run_grouped, run_local, run_sharded,
+)
 from ..core.table import Table
 
 
@@ -73,6 +75,19 @@ def naive_bayes_fit(table: Table, num_classes: int, *,
     if table.mesh is not None:
         return run_sharded(agg, table, block_size=block_size)
     return run_local(agg, table, block_size=block_size)
+
+
+def naive_bayes_grouped(table: Table, key_col: str, num_classes: int,
+                        num_groups: int | None = None, *,
+                        block_size: int | None = None,
+                        method: str = "auto") -> NaiveBayesModel:
+    """``SELECT g, naive_bayes(...) FROM data GROUP BY g`` — one NB model
+    per group through the partitioned grouped-scan core; every model field
+    carries a leading group axis."""
+    t = Table({"x": table["x"], "y": table["y"], key_col: table[key_col]},
+              table.mesh, table.row_axes)
+    return run_grouped(NaiveBayesAggregate(num_classes), t, key_col,
+                       num_groups, block_size=block_size, method=method)
 
 
 @jax.jit

@@ -12,7 +12,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import (
+    Aggregate, MERGE_SUM, run_grouped, run_local, run_sharded,
+)
 from ..core.templates import ProfileAggregate
 from ..core.table import Table
 
@@ -35,6 +37,40 @@ class HistogramAggregate(Aggregate):
         return state.at[idx].add(mask.astype(jnp.float32))
 
 
+class GroupedHistogramAggregate(Aggregate):
+    """Per-group-range histogram: ``lo``/``hi`` are ``(G,)`` arrays and
+    each row bins against ITS group's range, looked up through a group-id
+    data column — the state stays one ``(bins,)`` histogram, per-group
+    isolation comes from the grouped engine."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, lo: jax.Array, hi: jax.Array, bins: int = 4096,
+                 value_col: str = "v", gid_col: str = "__g__"):
+        self.lo, self.hi, self.bins = lo, hi, bins
+        self.value_col = value_col
+        self.gid_col = gid_col
+
+    def init(self, block):
+        return jnp.zeros((self.bins,), jnp.float32)
+
+    def transition(self, state, block, mask):
+        g = jnp.clip(block[self.gid_col].astype(jnp.int32), 0,
+                     self.lo.shape[0] - 1)
+        v = block[self.value_col].astype(jnp.float32)
+        lo, hi = self.lo[g], self.hi[g]
+        t = (v - lo) / jnp.maximum(hi - lo, 1e-30)
+        idx = jnp.clip((t * self.bins).astype(jnp.int32), 0, self.bins - 1)
+        return state.at[idx].add(mask.astype(jnp.float32))
+
+
+def _interp_quantiles(hist, lo, hi, qs, bins):
+    cdf = jnp.cumsum(hist) / jnp.maximum(jnp.sum(hist), 1.0)
+    idx = jnp.clip(jnp.searchsorted(cdf, qs), 0, bins - 1)
+    width = (hi - lo) / bins
+    return lo + (idx.astype(jnp.float32) + 0.5) * width
+
+
 def quantiles(table: Table, qs, *, value_col: str = "v", bins: int = 4096,
               block_size: int | None = None) -> jax.Array:
     """Approximate quantiles with error ≤ range/bins."""
@@ -44,9 +80,30 @@ def quantiles(table: Table, qs, *, value_col: str = "v", bins: int = 4096,
     prof = run(ProfileAggregate())[value_col]
     lo, hi = float(prof["min"]), float(prof["max"])
     hist = run(HistogramAggregate(lo, hi, bins, value_col))
-    cdf = jnp.cumsum(hist) / jnp.maximum(jnp.sum(hist), 1.0)
     qs = jnp.asarray(qs, jnp.float32)
-    idx = jnp.searchsorted(cdf, qs)
-    idx = jnp.clip(idx, 0, bins - 1)
-    width = (hi - lo) / bins
-    return lo + (idx.astype(jnp.float32) + 0.5) * width
+    return _interp_quantiles(hist, lo, hi, qs, bins)
+
+
+def quantiles_grouped(table: Table, key_col: str, qs, *,
+                      num_groups: int | None = None, value_col: str = "v",
+                      bins: int = 4096, block_size: int | None = None
+                      ) -> jax.Array:
+    """Per-group approximate quantiles (``... GROUP BY g``), two grouped
+    passes through the partitioned core: a grouped profile fixes each
+    group's range, then one grouped histogram pass bins every row against
+    its own group's range.  Returns ``(num_groups, len(qs))``; groups with
+    no rows yield non-finite values (their range is empty)."""
+    gcol = table[key_col]
+    # one partitioning sort, shared by both grouped passes; the group id
+    # rides along as a data column for the histogram's range lookup
+    t = Table({value_col: table[value_col], "__g__": gcol, key_col: gcol},
+              table.mesh, table.row_axes)
+    view = t.group_by(key_col, num_groups)
+    prof = run_grouped(ProfileAggregate(), view.select(value_col),
+                       block_size=block_size)[value_col]
+    lo, hi = prof["min"], prof["max"]
+    hist = run_grouped(GroupedHistogramAggregate(lo, hi, bins, value_col),
+                       view, block_size=block_size)
+    qs = jnp.asarray(qs, jnp.float32)
+    return jax.vmap(
+        lambda h, l, u: _interp_quantiles(h, l, u, qs, bins))(hist, lo, hi)
