@@ -10,6 +10,12 @@ masked-vmap lowering.
     groups' blocks each round, so iters/sec stays high as the tail
     thins, while the masked layout pays G full scans every round.
 
+  * ``--sharded`` — device-count scaling of the SHARDED grouped engine:
+    ``run_grouped(mesh=)`` / ``fit_grouped(mesh=)`` on meshes of 1, 2,
+    4, ... devices (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU
+    smoke).  Emits per-device-count rows_per_sec / iters_per_sec JSON.
+
 ``run()`` feeds the CSV harness (benchmarks/run.py); ``python -m
 benchmarks.bench_grouped [--json out.json]`` emits a JSON document for
 the bench trajectory and the CI smoke artifact.
@@ -141,6 +147,83 @@ def bench(rows: int = 200_000, dims: int = 8, groups: int = 64,
     return out
 
 
+def bench_sharded(rows: int = 200_000, dims: int = 8, groups: int = 64,
+                  fit_groups: int = 64, max_iters: int = 25,
+                  reps: int = 3) -> dict:
+    """Device-count scaling of the sharded grouped engine.
+
+    For each mesh size (1, 2, 4, ... up to the available device count):
+    one ``run_grouped`` segment scan and one ``fit_grouped`` IRLS fit,
+    both with the group-aligned blocks chunked across the mesh.  The
+    local (mesh=None) engine is the 0-device baseline row.
+
+    Each ``run_grouped(mesh=)`` call re-places the block layout on the
+    mesh, so ``seconds`` includes that host-side gather + device_put;
+    ``placement_seconds`` reports it separately (measured via
+    ``GroupedView.sharded_blocks``) so the scan-only scaling is
+    ``seconds - placement_seconds``.  ``fit_grouped`` amortizes one
+    placement over the whole multi-round fit.
+    """
+    from repro.core.compat import make_mesh
+
+    key = jax.random.PRNGKey(0)
+    tbl = _grouped_table(key, rows, dims, groups)
+    view = tbl.group_by("g", groups)
+    ftbl = _skewed_logistic_table(jax.random.fold_in(key, 1), rows, dims,
+                                  fit_groups)
+    agg = LinregrAggregate()
+    devices = jax.devices()
+    counts = [c for c in (1, 2, 4, 8, 16, 32) if c <= len(devices)]
+    out: dict = {"config": {"rows": rows, "dims": dims, "groups": groups,
+                            "fit_groups": fit_groups,
+                            "max_iters": max_iters, "reps": reps,
+                            "available_devices": len(devices)},
+                 "device_scaling": []}
+
+    def one_point(mesh, label):
+        s = _time(lambda: run_grouped(agg, view, method="segment",
+                                      mesh=mesh), reps)
+        from repro.core.aggregates import segment_block_size
+        bs = segment_block_size(rows, groups)
+        place = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = view.sharded_blocks(mesh, ("data",), bs) if mesh is not \
+                None else view.aligned_blocks(bs)
+            jax.block_until_ready(jax.tree.leaves(out[0])[0])
+            place = min(place, time.perf_counter() - t0)
+        def fit_once():
+            return fit_grouped(IRLSTask(), ftbl, "g", fit_groups,
+                               max_iters=max_iters, tol=1e-6,
+                               layout="segment", mesh=mesh)
+        res = fit_once()  # compile + diagnostics, untimed
+        fs = float("inf")
+        for _ in range(reps):  # honor --reps like the one-pass points
+            t0 = time.perf_counter()
+            fit_once()
+            fs = min(fs, time.perf_counter() - t0)
+        rounds = int(res.n_iters.max())
+        return {"devices": label,
+                "run_grouped": {"seconds": s, "rows_per_sec": rows / s,
+                                "placement_seconds": place},
+                "fit_grouped": {"seconds": fs,
+                                "iters_per_sec": rounds / fs,
+                                "rounds": rounds,
+                                "blocks": res.stats["blocks"]}}
+
+    base = one_point(None, 0)  # local engine baseline
+    out["device_scaling"].append(base)
+    for nd in counts:
+        mesh = make_mesh((nd,), ("data",), devices=devices[:nd])
+        point = one_point(mesh, nd)
+        point["run_grouped"]["speedup_vs_local"] = \
+            base["run_grouped"]["seconds"] / point["run_grouped"]["seconds"]
+        point["fit_grouped"]["speedup_vs_local"] = \
+            base["fit_grouped"]["seconds"] / point["fit_grouped"]["seconds"]
+        out["device_scaling"].append(point)
+    return out
+
+
 def run(rows: int = 200_000, groups: int = 64, reps: int = 3):
     """CSV rows for benchmarks/run.py: (name, us_per_call, derived)."""
     r = bench(rows=rows, groups=groups, reps=reps)
@@ -169,10 +252,18 @@ if __name__ == "__main__":
     ap.add_argument("--fit-groups", type=int, default=64)
     ap.add_argument("--iters", type=int, default=25)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--sharded", action="store_true",
+                    help="device-count scaling of the sharded grouped "
+                         "engine instead of the segment-vs-masked bench")
     args = ap.parse_args()
-    doc = bench(rows=args.rows, groups=args.groups,
-                fit_groups=args.fit_groups, max_iters=args.iters,
-                reps=args.reps)
+    if args.sharded:
+        doc = bench_sharded(rows=args.rows, groups=args.groups,
+                            fit_groups=args.fit_groups,
+                            max_iters=args.iters, reps=args.reps)
+    else:
+        doc = bench(rows=args.rows, groups=args.groups,
+                    fit_groups=args.fit_groups, max_iters=args.iters,
+                    reps=args.reps)
     text = json.dumps(doc, indent=2)
     if args.json:
         with open(args.json, "w") as f:

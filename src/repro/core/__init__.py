@@ -22,6 +22,25 @@ The engine matrix — every workload is (execution engine) x (pass shape):
   grouped       run_grouped                fit_grouped
   ============  =========================  ===============================
 
+Engine capabilities — which cross-cutting features each engine honors
+(``mask=`` is a base row filter applied at the fold level; ``group_by``
+means stacked per-group output; ``fit`` is iterative driving; ``stream``
+is out-of-core block iteration):
+
+  ===============  =====  ========  ==================  ======
+  engine           mask   group_by  fit                 stream
+  ===============  =====  ========  ==================  ======
+  local            yes    —         fit("local")        —
+  sharded          yes    —         fit("sharded")      —
+  stream           —      —         fit_stream          yes
+  grouped-segment  yes    yes       fit_grouped         —
+  grouped-masked   yes    yes       fit_grouped         —
+  sharded-grouped  yes    yes       fit_grouped(mesh=)  —
+  ===============  =====  ========  ==================  ======
+
+  (``fit_grouped(mesh=)`` requires the segment layout; the masked layout
+  ignores ``mesh`` and runs as one jit program.)
+
 - local: single-shard blocked ``lax.scan`` fold (PostgreSQL mode).
 - sharded: ``shard_map`` over the mesh's row axes — local fold, then the
   merge-combinator collective (Greenplum segments; for iterative fits the
@@ -39,6 +58,17 @@ The engine matrix — every workload is (execution engine) x (pass shape):
   skewed-convergence tails cost O(active rows) instead of G full scans.
   Generic-merge aggregates and multi-statement tasks fall back to the
   masked-vmap path (O(G·n), exact for any mask-honoring aggregate).
+- sharded-grouped (``run_grouped(mesh=)`` / ``fit_grouped(mesh=)``,
+  defaulting to the table's mesh): MADlib's two-phase GROUP BY across the
+  mesh — the group-aligned blocks are chunked whole across the row axes
+  (``GroupedView.sharded_blocks``), every segment runs the real block
+  transition locally and the G per-segment partial states merge with each
+  leaf's combinator collective: one data pass, G x num_segments partial
+  states, bit-identical to the local segment fold for exact-state
+  aggregates.  Generic-merge aggregates take a sharded masked path (local
+  masked folds + all-gather generic merge).  ``fit_grouped(mesh=)`` runs
+  the whole frozen-group driver loop inside ONE shard_map program with
+  the active-row trace preserved in ``FitResult.stats``.
 
 - IterativeTask + fit / fit_grouped / fit_stream — the unified iterative
   executor (§3.1.2 driver pattern, Bismarck-style): ONE controller loop

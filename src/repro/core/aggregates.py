@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..distributed.sharding import distribute_rows, row_pspec
 from .compat import shard_map as _compat_shard_map
 from .table import GroupedView, Table, Columns
 
@@ -114,18 +115,24 @@ class Aggregate:
             ops = self._merge_ops_tree(state)
             return jax.tree.map(partial(_collective_leaf, axes=axes), ops, state)
         # Generic path: gather every shard's state and fold sequentially.
-        gathered = jax.tree.map(
-            lambda x: jax.lax.all_gather(x, axes, tiled=False), state
-        )
-        # leading axis length is the product of the gathered axes
-        lead = jax.tree.leaves(gathered)[0].shape[0]
-        first = jax.tree.map(lambda x: x[0], gathered)
+        return _all_gather_merge_fold(self.merge, state, axes)
 
-        def body(i, acc):
-            nxt = jax.tree.map(lambda x: x[i], gathered)
-            return self.merge(acc, nxt)
 
-        return jax.lax.fori_loop(1, lead, body, first)
+def _all_gather_merge_fold(merge_fn, state, axes: tuple[str, ...]):
+    """Generic cross-segment merge inside ``shard_map``: all-gather every
+    segment's state pytree and fold them sequentially with ``merge_fn``."""
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axes, tiled=False), state
+    )
+    # leading axis length is the product of the gathered axes
+    lead = jax.tree.leaves(gathered)[0].shape[0]
+    first = jax.tree.map(lambda x: x[0], gathered)
+
+    def body(i, acc):
+        nxt = jax.tree.map(lambda x: x[i], gathered)
+        return merge_fn(acc, nxt)
+
+    return jax.lax.fori_loop(1, lead, body, first)
 
 
 class FusedAggregate(Aggregate):
@@ -192,11 +199,8 @@ def run_many(aggs, table: Table, *, block_size: int | None = None,
     """
     fused = FusedAggregate(aggs)
     if table.mesh is not None:
-        if mask is not None:
-            raise ValueError("run_many: mask is not supported on sharded "
-                             "tables (run_sharded folds whole shards); "
-                             "filter rows or use a local table")
-        return run_sharded(fused, table, block_size=block_size, jit=jit)
+        return run_sharded(fused, table, block_size=block_size, mask=mask,
+                           jit=jit)
     return run_local(fused, table, block_size=block_size, mask=mask, jit=jit)
 
 
@@ -271,35 +275,41 @@ def run_local(agg: Aggregate, table: Table, *, block_size: int | None = None,
 
 def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
                 row_axes: tuple[str, ...] | None = None,
-                block_size: int | None = None, jit: bool = True) -> Any:
+                block_size: int | None = None,
+                mask: jax.Array | None = None, jit: bool = True) -> Any:
     """Execute an aggregate in parallel across the mesh's row axes.
 
     Each shard folds its local rows (transition), states are merged across
     segments with the aggregate's merge combinators (second-phase
     aggregation), and ``final`` runs replicated.  This function is the
-    paper's Figure-4 engine.
+    paper's Figure-4 engine.  ``mask`` is a base row filter in table row
+    order, sharded alongside the rows and applied at the fold level — the
+    same contract as ``run_local``.
     """
     mesh = mesh or table.mesh
     row_axes = tuple(row_axes or table.row_axes or ("data",))
     if mesh is None:
-        return run_local(agg, table, block_size=block_size, jit=jit)
+        return run_local(agg, table, block_size=block_size, mask=mask,
+                         jit=jit)
 
     in_spec = jax.tree.map(
-        lambda v: P(row_axes, *([None] * (v.ndim - 1))), dict(table.columns)
+        lambda v: row_pspec(row_axes, v.ndim), dict(table.columns)
     )
+    if mask is None:
+        mask = jnp.ones((table.n_rows,), jnp.bool_)
 
-    def shard_fn(columns):
-        local = _blocked_fold(agg, columns, None, block_size)
+    def shard_fn(columns, mask):
+        local = _blocked_fold(agg, columns, mask, block_size)
         merged = agg.mesh_merge(local, row_axes)
         return agg.final(merged)
 
     mapped = _compat_shard_map(
-        shard_fn, mesh=mesh, in_specs=(in_spec,),
+        shard_fn, mesh=mesh, in_specs=(in_spec, row_pspec(row_axes)),
         out_specs=P(),  # replicated result
         check_vma=False,
     )
     fn = jax.jit(mapped) if jit else mapped
-    return fn(dict(table.columns))
+    return fn(dict(table.columns), jnp.asarray(mask))
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +392,23 @@ def segment_block_size(n_rows: int, num_groups: int,
     return max(64, min(_SEGMENT_BLOCK, 1 << (avg - 1).bit_length()))
 
 
+def segment_block_update(make_agg, group_states, ops, blk: Columns,
+                         bm: jax.Array, g: jax.Array, acc) -> Any:
+    """Fold ONE group-aligned block into the stacked per-group
+    accumulators: run the (possibly group-parameterized) aggregate's real
+    block transition from init, then scatter-merge the block state into
+    group ``g``'s slot with each leaf's combinator.  Shared by the
+    one-pass scan (:func:`segment_fold`) and the iterative engine's
+    compacted block loop — the single definition of the segment-merge
+    contract."""
+    s_g = jax.tree.map(lambda s: s[g], group_states)
+    a = make_agg(s_g)
+    bstate = a.transition(a.init(blk), blk, bm)
+    return jax.tree.map(
+        lambda op, al, bl: _scatter_leaf(op, al, g[None], bl[None]),
+        ops, acc, bstate)
+
+
 def segment_fold(make_agg, group_states, ops, columns: Columns,
                  valid: jax.Array, block_gids: jax.Array,
                  num_groups: int) -> Any:
@@ -403,6 +430,10 @@ def segment_fold(make_agg, group_states, ops, columns: Columns,
     aggregate; pass ``lambda _: agg`` with dummy states for a uniform
     aggregate.
     """
+    lead = jax.tree.leaves(group_states)[0].shape[0]
+    if lead != num_groups:
+        raise ValueError(f"segment_fold: group_states lead axis {lead} "
+                         f"!= num_groups={num_groups}")
     inits = jax.vmap(lambda s: make_agg(s).init(columns))(group_states)
     nb = block_gids.shape[0]
     if nb == 0:
@@ -414,23 +445,36 @@ def segment_fold(make_agg, group_states, ops, columns: Columns,
 
     def step(acc, xs):
         blk, bm, g = xs
-        s_g = jax.tree.map(lambda s: s[g], group_states)
-        a = make_agg(s_g)
-        bstate = a.transition(a.init(blk), blk, bm)
-        acc = jax.tree.map(
-            lambda op, al, bl: _scatter_leaf(op, al, g[None], bl[None]),
-            ops, acc, bstate)
-        return acc, None
+        return segment_block_update(make_agg, group_states, ops, blk, bm,
+                                    g, acc), None
 
     acc, _ = jax.lax.scan(step, inits, (blocks, vmask, block_gids))
     return acc
+
+
+def merge_group_states(agg: Aggregate, ops, states, axes: tuple[str, ...]):
+    """Cross-segment merge of stacked ``(G, ...)`` per-group states inside
+    ``shard_map``: leaf-wise collectives when the aggregate declares merge
+    combinators (``ops`` from :meth:`Aggregate.segment_ops`), else an
+    all-gather of every segment's group-state stack folded with the
+    aggregate's own generic ``merge`` (vmapped over the group axis)."""
+    if ops is not None:
+        return jax.tree.map(partial(_collective_leaf, axes=axes), ops,
+                            states)
+    return _all_gather_merge_fold(jax.vmap(agg.merge), states, axes)
+
+
+def _mesh_segments(mesh: Mesh, row_axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in row_axes]))
 
 
 def run_grouped(agg: Aggregate, table, group_col: str | None = None,
                 num_groups: int | None = None, *,
                 block_size: int | None = None,
                 mask: jax.Array | None = None,
-                method: str = "auto", jit: bool = True) -> Any:
+                method: str = "auto", mesh: Mesh | None = None,
+                row_axes: tuple[str, ...] | None = None,
+                jit: bool = True) -> Any:
     """Grouped aggregation (``SELECT ..., agg(...) GROUP BY g``).
 
     ``table`` is either a :class:`Table` — grouped by its ``group_col``
@@ -454,8 +498,23 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
     ``mask`` is a base row filter applied before grouping (like
     ``run_local``), always given in the ORIGINAL table's row order;
     ``num_groups`` defaults to ``max(gid) + 1`` (the view's group count).
+
+    ``mesh`` (defaulting to the table's) engages the SHARDED grouped
+    engine — MADlib's two-phase GROUP BY (§4.1) across the mesh's row
+    axes: the group-aligned blocks are distributed in whole-block chunks,
+    every segment runs the real per-block transition locally
+    (:func:`segment_fold` on its chunk), and the G per-segment partial
+    states merge with each leaf's combinator collective — one data pass,
+    ``G x num_segments`` partial states, bit-identical to the local
+    segment fold for exact-state aggregates.  Generic-merge aggregates
+    take a sharded masked path instead (local masked folds, all-gather
+    generic merge).
     """
     view = table if isinstance(table, GroupedView) else None
+    base_tbl = view.table if view is not None else table
+    if mesh is None:
+        mesh = base_tbl.mesh
+    row_axes = tuple(row_axes or base_tbl.row_axes or ("data",))
     if view is not None:
         if num_groups is not None and num_groups != view.num_groups:
             raise ValueError(f"run_grouped: num_groups={num_groups} "
@@ -472,9 +531,18 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
         data = {k: v for k, v in table.columns.items() if k != group_col}
     G = num_groups
 
-    ops = None
     if method in ("auto", "segment"):
         ops = probe_segment_ops(agg, data)
+    elif mesh is not None:
+        # forced masked + sharded: ops only optimize the cross-shard
+        # merge, so an un-probe-able init (abstract-eval failure in a
+        # generic-merge aggregate) must not be fatal
+        try:
+            ops = probe_segment_ops(agg, data)
+        except Exception:
+            ops = None
+    else:
+        ops = None  # forced masked, local: ops never consulted
     if method == "auto":
         method = "segment" if ops is not None else "masked"
 
@@ -488,15 +556,37 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
             view = table.group_by(group_col, G)
         pmask = None if mask is None else view.permute(mask)
         bs = segment_block_size(view.n_rows, G, block_size)
-        cols_a, valid_a, bgids = view.aligned_blocks(bs, pmask)
         dummy_states = jnp.zeros((G,), jnp.int32)
 
-        def go_segment(columns, valid, bgids):
+        if mesh is None:
+            cols_a, valid_a, bgids = view.aligned_blocks(bs, pmask)
+
+            def go_segment(columns, valid, bgids):
+                states = segment_fold(lambda _s: agg, dummy_states, ops,
+                                      columns, valid, bgids, G)
+                return jax.vmap(agg.final)(states)
+
+            fn = jax.jit(go_segment) if jit else go_segment
+            return fn(cols_a, valid_a, bgids)
+
+        # Sharded segment path: each segment folds its local chunk of
+        # group-aligned blocks, per-group partials merge leaf-wise.
+        cols_a, valid_a, bgids = view.sharded_blocks(mesh, row_axes, bs,
+                                                     pmask)
+        in_spec = jax.tree.map(
+            lambda v: row_pspec(row_axes, v.ndim), cols_a)
+
+        def shard_segment(columns, valid, bgids):
             states = segment_fold(lambda _s: agg, dummy_states, ops,
                                   columns, valid, bgids, G)
-            return jax.vmap(agg.final)(states)
+            merged = merge_group_states(agg, ops, states, row_axes)
+            return jax.vmap(agg.final)(merged)
 
-        fn = jax.jit(go_segment) if jit else go_segment
+        mapped = _compat_shard_map(
+            shard_segment, mesh=mesh,
+            in_specs=(in_spec, row_pspec(row_axes), row_pspec(row_axes)),
+            out_specs=P(), check_vma=False)
+        fn = jax.jit(mapped) if jit else mapped
         return fn(cols_a, valid_a, bgids)
 
     if method != "masked":
@@ -510,6 +600,11 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
         gids = table[group_col].astype(jnp.int32)
         base_mask = mask
 
+    if mesh is not None:
+        return _run_grouped_masked_sharded(
+            agg, ops, data, gids, base_mask, G, block_size, mesh, row_axes,
+            jit)
+
     def go_masked(data, gids, mask):
         base = jnp.ones(gids.shape, jnp.bool_) if mask is None else mask
 
@@ -521,3 +616,43 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
 
     fn = jax.jit(go_masked) if jit else go_masked
     return fn(data, gids, base_mask)
+
+
+def _run_grouped_masked_sharded(agg, ops, data, gids, base_mask, G,
+                                block_size, mesh, row_axes, jit_):
+    """Sharded masked path: every segment folds its LOCAL rows once per
+    group (mask contract), per-group partial states merge across segments
+    — leaf-wise collectives when available, the all-gather generic fold
+    otherwise.  Rows are padded (masked invalid) to divide the segment
+    count, so any local table works with an explicit ``mesh=``."""
+    segs = _mesh_segments(mesh, row_axes)
+    n = next(iter(data.values())).shape[0]
+    valid = jnp.ones((n,), jnp.bool_) if base_mask is None \
+        else jnp.asarray(base_mask)
+    pad = -n % segs
+    if pad:
+        data = {k: jnp.pad(v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+                for k, v in data.items()}
+        gids = jnp.pad(gids, (0, pad), constant_values=-1)
+        valid = jnp.pad(valid, (0, pad))  # padding rows: invalid
+    placed = distribute_rows(mesh, row_axes,
+                             dict(data, __gid__=gids, __valid__=valid))
+    gids = placed.pop("__gid__")
+    valid = placed.pop("__valid__")
+    in_spec = jax.tree.map(lambda v: row_pspec(row_axes, v.ndim), placed)
+
+    def shard_masked(data, gids, valid):
+        def per_group(g):
+            return _blocked_fold(agg, data, (gids == g) & valid, block_size)
+
+        states = jax.vmap(per_group)(jnp.arange(G))
+        merged = merge_group_states(agg, ops, states, row_axes)
+        return jax.vmap(agg.final)(merged)
+
+    mapped = _compat_shard_map(
+        shard_masked, mesh=mesh,
+        in_specs=(in_spec, row_pspec(row_axes), row_pspec(row_axes)),
+        out_specs=P(),
+        check_vma=False)
+    fn = jax.jit(mapped) if jit_ else mapped
+    return fn(placed, gids, valid)

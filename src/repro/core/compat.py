@@ -49,8 +49,19 @@ def cost_analysis(compiled) -> dict:
     return dict(cost or {})
 
 
-def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...]):
-    """An Auto-typed mesh on new JAX; a plain mesh where types don't exist."""
+def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...],
+              devices=None):
+    """An Auto-typed mesh on new JAX; a plain mesh where types don't exist.
+
+    ``devices`` selects an explicit device subset (e.g. meshes of 1/2/4
+    devices on an 8-device host for device-count scaling benchmarks) —
+    ``jax.make_mesh`` requires the product of ``axis_shapes`` to cover
+    every addressable device, so subsets build a plain ``Mesh`` directly
+    on every JAX version."""
+    if devices is not None:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devices).reshape(axis_shapes), axis_names)
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
             axis_shapes, axis_names,

@@ -50,6 +50,7 @@ New methods should register a task here instead of writing loops:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable, Iterable
 
 import jax
@@ -57,9 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..distributed.sharding import row_pspec
 from .aggregates import (
-    Aggregate, _blocked_fold, probe_segment_ops, run_local, run_sharded,
-    run_stream, segment_block_size, _scatter_leaf,
+    Aggregate, _blocked_fold, _collective_leaf, probe_segment_ops,
+    run_local, run_sharded, run_stream, segment_block_size,
+    segment_block_update,
 )
 from .compat import shard_map as _compat_shard_map
 from .table import Table, Columns
@@ -119,7 +122,8 @@ class _EagerRunner:
 
     def __call__(self, agg: Aggregate):
         if self.table.mesh is not None:
-            return run_sharded(agg, self.table, block_size=self.block_size)
+            return run_sharded(agg, self.table, block_size=self.block_size,
+                               mask=self.mask)
         return run_local(agg, self.table, block_size=self.block_size,
                          mask=self.mask)
 
@@ -297,9 +301,6 @@ def fit(task: IterativeTask, table: Table, *, max_iters: int = 100,
         engine = "sharded" if mesh is not None else "local"
     if engine == "sharded" and mesh is None:
         engine = "local"
-    if engine == "sharded" and mask is not None:
-        raise ValueError("fit: mask is not supported on the sharded engine; "
-                         "filter rows or use a local table")
 
     state0 = warm_start if warm_start is not None else task.init_state(columns)
     state0 = jax.tree.map(jnp.asarray, state0)
@@ -322,10 +323,12 @@ def fit(task: IterativeTask, table: Table, *, max_iters: int = 100,
         state, aux, n, m, trace = fn(columns, mask, state0)
     else:
         in_spec = jax.tree.map(
-            lambda v: P(row_axes, *([None] * (v.ndim - 1))), columns)
+            lambda v: row_pspec(row_axes, v.ndim), columns)
+        mask_arr = jnp.ones((table.n_rows,), jnp.bool_) if mask is None \
+            else jnp.asarray(mask)
 
-        def shard_fn(columns, state0):
-            runner = PassRunner(columns, None, block_size, row_axes)
+        def shard_fn(columns, mask, state0):
+            runner = PassRunner(columns, mask, block_size, row_axes)
             iter_fn = _make_iter_fn(task, runner)
             if tol is None:
                 out = _scan_fit(iter_fn, state0, max_iters)
@@ -335,10 +338,11 @@ def fit(task: IterativeTask, table: Table, *, max_iters: int = 100,
             return task.mesh_epilogue(state, row_axes), aux, n, m, trace
 
         mapped = _compat_shard_map(
-            shard_fn, mesh=mesh, in_specs=(in_spec, P()), out_specs=P(),
-            check_vma=False)
+            shard_fn, mesh=mesh,
+            in_specs=(in_spec, row_pspec(row_axes), P()),
+            out_specs=P(), check_vma=False)
         fn = jax.jit(mapped) if jit else mapped
-        state, aux, n, m, trace = fn(columns, state0)
+        state, aux, n, m, trace = fn(columns, mask_arr, state0)
 
     result = task.finalize(state, aux)
     n = int(n)
@@ -401,7 +405,8 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
                 num_groups: int | None = None, *, max_iters: int = 100,
                 tol: float | None = 1e-6, block_size: int | None = None,
                 mask: jax.Array | None = None, warm_start: Any = None,
-                layout: str = "auto", jit: bool = True) -> FitResult:
+                layout: str = "auto", mesh=None, row_axes=None,
+                jit: bool = True) -> FitResult:
     """Fit one model per group of ``key_col`` — MADlib's ``GROUP BY``
     model fitting (the paper's grouped linregr, §4.1) generalized to every
     registered task.
@@ -429,12 +434,25 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
     vectors, and whose ``stats`` records the layout plus (segment) the
     per-round active-row counts and total blocks scanned.  ``warm_start``,
     when given, must already be stacked per group.
+
+    ``mesh`` (defaulting to the table's) runs the WHOLE frozen-group
+    driver loop inside one ``shard_map`` program on the segment layout:
+    the group-aligned blocks are chunked across the mesh's row axes, each
+    round every segment gather-compacts and folds its LOCAL still-active
+    blocks, per-group partial states merge with the aggregate's leaf
+    combinator collectives, and the replicated driver update / freezing /
+    active-row trace proceed exactly as locally — zero host round-trips
+    across the fit.  The masked layout ignores ``mesh`` and executes as
+    one jit program over the (possibly distributed) rows.
     """
     cols = dict(table.columns)
     gids = cols.pop(key_col).astype(jnp.int32)
     if num_groups is None:
         num_groups = int(jax.device_get(jnp.max(gids))) + 1
     G = num_groups
+    if mesh is None:
+        mesh = table.mesh
+    row_axes = tuple(row_axes or table.row_axes or ("data",))
 
     if warm_start is not None:
         states0 = jax.tree.map(jnp.asarray, warm_start)
@@ -448,7 +466,8 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
             else "masked"
     if layout == "segment":
         return _fit_grouped_segment(task, table, key_col, G, states0,
-                                    max_iters, tol, block_size, mask, jit)
+                                    max_iters, tol, block_size, mask, jit,
+                                    mesh=mesh, row_axes=row_axes)
     if layout != "masked":
         raise ValueError(f"unknown layout {layout!r} "
                          "(use 'auto', 'segment' or 'masked')")
@@ -539,9 +558,13 @@ def _fit_grouped_masked(task, cols, gids, G, states0, max_iters, tol,
 
 
 def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
-                         block_size, mask, jit_):
+                         block_size, mask, jit_, mesh=None, row_axes=()):
     """Partitioned layout: one segment scan over the gather-compacted
-    blocks of still-active groups per round."""
+    blocks of still-active groups per round.  With ``mesh`` the same loop
+    runs inside ONE ``shard_map`` program: every segment owns a chunk of
+    whole blocks, compacts/folds its local active ones, and the per-group
+    partials merge with the leaf combinator collectives before the
+    (replicated) driver update."""
     if type(task).iteration is not IterativeTask.iteration:
         raise ValueError("fit_grouped: layout='segment' requires the "
                          "default single-scan iteration(); multi-statement "
@@ -559,23 +582,36 @@ def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
     # exactly one group, so a round gather-compacts whole blocks.
     pmask = None if mask is None else view.permute(mask)
     bs = segment_block_size(n, G, block_size)
-    cols, valid, bgids = view.aligned_blocks(bs, pmask)
-    NB = int(bgids.shape[0])
+    if mesh is not None:
+        row_axes = tuple(row_axes)
+        cols, valid, bgids = view.sharded_blocks(mesh, row_axes, bs, pmask)
+    else:
+        row_axes = ()
+        cols, valid, bgids = view.aligned_blocks(bs, pmask)
+    # real global block count for stats: sentinel padding blocks (gid G,
+    # added only to divide the segment count) are not scannable work
+    NB = int(jax.device_get(jnp.sum(bgids < G)))
     counts = view.counts
     eff_tol = jnp.float32(jnp.inf if tol is None else tol)
 
     def go(cols, valid, bgids, counts, states0):
+        nbl = bgids.shape[0]  # engine-local block count (= NB locally)
+
         def round_core(states, active):
-            """One driver round over the compacted blocks of active
+            """One driver round over the compacted local blocks of active
             groups."""
-            act_blk = active[bgids] if NB else jnp.zeros((0,), jnp.bool_)
+            # sentinel gid G marks sharding-padding blocks: the appended
+            # False keeps them out of every round's compaction
+            act_ext = jnp.concatenate(
+                [active, jnp.zeros((1,), active.dtype)])
+            act_blk = act_ext[bgids] if nbl else jnp.zeros((0,), jnp.bool_)
             nb = jnp.sum(act_blk.astype(jnp.int32))
             m_rows = jnp.sum(counts * active.astype(jnp.int32))
             # gather-compact: indices of active blocks, packed to the front
             pos = jnp.cumsum(act_blk.astype(jnp.int32)) - 1
-            blk_idx = jnp.zeros((max(NB, 1),), jnp.int32).at[
-                jnp.where(act_blk, pos, NB)
-            ].set(jnp.arange(NB, dtype=jnp.int32), mode="drop")
+            blk_idx = jnp.zeros((max(nbl, 1),), jnp.int32).at[
+                jnp.where(act_blk, pos, nbl)
+            ].set(jnp.arange(nbl, dtype=jnp.int32), mode="drop")
 
             inits = jax.vmap(
                 lambda s: task.make_aggregate(s).init(cols))(states)
@@ -588,17 +624,16 @@ def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
                     cols)
                 bm = jax.lax.dynamic_slice_in_dim(valid, j * bs, bs)
                 g = bgids[j]
-                s_g = jax.tree.map(lambda s: s[g], states)
-                a = task.make_aggregate(s_g)
-                bstate = a.transition(a.init(blk), blk, bm)
-                acc = jax.tree.map(
-                    lambda op, al, bl: _scatter_leaf(op, al, g[None],
-                                                     bl[None]),
-                    ops, acc, bstate)
+                acc = segment_block_update(task.make_aggregate, states,
+                                           ops, blk, bm, g, acc)
                 return b + 1, acc
 
             _, merged = jax.lax.while_loop(
                 lambda c: c[0] < nb, blk_body, (jnp.int32(0), inits))
+            if row_axes:
+                # second-phase aggregation: per-group partials -> global
+                merged = jax.tree.map(
+                    partial(_collective_leaf, axes=row_axes), ops, merged)
 
             def g_post(s, agg_state):
                 a = task.make_aggregate(s)
@@ -651,10 +686,20 @@ def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
                 jnp.zeros((max_iters,), jnp.int32))
         states, aux, n_rounds, m_vec, it_vec, trace, blk_tot, act_tr = \
             jax.lax.while_loop(cond, body, init)
+        if row_axes:  # total blocks actually folded, across all segments
+            blk_tot = jax.lax.psum(blk_tot, row_axes)
         results = jax.vmap(task.finalize)(states, aux)
         return (states, results, m_vec, it_vec, trace, n_rounds, blk_tot,
                 act_tr)
 
+    if mesh is not None:
+        col_spec = jax.tree.map(
+            lambda v: row_pspec(row_axes, v.ndim), cols)
+        go = _compat_shard_map(
+            go, mesh=mesh,
+            in_specs=(col_spec, row_pspec(row_axes), row_pspec(row_axes),
+                      P(), P()),
+            out_specs=P(), check_vma=False)
     fn = jax.jit(go) if jit_ else go
     (states, results, m_vec, it_vec, trace, n_rounds, blk_tot, act_tr) = fn(
         cols, valid, bgids, counts, states0)
@@ -667,6 +712,7 @@ def _fit_grouped_segment(task, table, key_col, G, states0, max_iters, tol,
     n_rounds = int(n_rounds)
     stats = {
         "layout": "segment",
+        "sharded": mesh is not None,
         "block_size": bs,
         "rounds": n_rounds,
         "blocks": int(blk_tot),

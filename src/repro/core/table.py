@@ -21,7 +21,7 @@ from typing import Any, Callable, Iterator, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 Columns = Mapping[str, jax.Array]
 
@@ -70,16 +70,14 @@ class Table:
         Rows must divide the product of the named axis sizes; callers pad via
         :meth:`pad_to` first when needed.
         """
+        from ..distributed.sharding import distribute_rows
         row_axes = tuple(row_axes)
         segs = int(np.prod([mesh.shape[a] for a in row_axes]))
         n = self.n_rows
         if n % segs:
             raise ValueError(f"n_rows={n} not divisible by {segs} segments; pad first")
-        out = {}
-        for k, v in self.columns.items():
-            spec = P(row_axes, *([None] * (v.ndim - 1)))
-            out[k] = jax.device_put(v, NamedSharding(mesh, spec))
-        return Table(out, mesh, row_axes)
+        return Table(distribute_rows(mesh, row_axes, dict(self.columns)),
+                     mesh, row_axes)
 
     # -- basic relational ops ----------------------------------------------
     @property
@@ -201,7 +199,8 @@ class GroupedView:
         return jnp.asarray(rows)[self.perm]
 
     def aligned_blocks(self, block_size: int,
-                       base_mask: jax.Array | None = None):
+                       base_mask: jax.Array | None = None, *,
+                       pad_blocks_to: int | None = None):
         """Group-aligned blocked layout: every group's segment zero-padded
         to a whole number of ``block_size`` row blocks, so each block holds
         rows of exactly ONE group.
@@ -214,29 +213,66 @@ class GroupedView:
         partitioned order (see :meth:`permute`).  Padding overhead is
         bounded by ``num_groups * block_size`` rows, so callers pick
         ``block_size`` near the typical segment size.
+
+        ``pad_blocks_to`` rounds the block count up to a multiple (the
+        sharded engine needs blocks to divide evenly across segments);
+        padding blocks carry the sentinel group id ``num_groups`` (out of
+        range: scatters drop them, active-group compaction never selects
+        them) with every row masked invalid.
         """
         bs = int(block_size)
         counts = np.asarray(jax.device_get(self.counts))
         starts = np.asarray(jax.device_get(self.offsets))[:-1]
         bpg = -(-counts // bs)  # blocks per group (0 for empty groups)
-        block_gids = jnp.asarray(
-            np.repeat(np.arange(self.num_groups), bpg).astype(np.int32))
+        bg_np = np.repeat(np.arange(self.num_groups), bpg).astype(np.int32)
         ppg = bpg * bs          # padded rows per group
         n2 = int(ppg.sum())
         if n2 == 0:
             cols = {k: v[:0] for k, v in self.table.columns.items()}
-            return cols, jnp.zeros((0,), jnp.bool_), block_gids
+            return cols, jnp.zeros((0,), jnp.bool_), jnp.asarray(bg_np)
         grp = np.repeat(np.arange(self.num_groups), ppg)
         out_start = np.concatenate([[0], np.cumsum(ppg)])[:-1]
         local = np.arange(n2) - out_start[grp]
         valid_np = local < counts[grp]
-        src = jnp.asarray(
-            np.where(valid_np, starts[grp] + local, 0).astype(np.int32))
+        src_np = np.where(valid_np, starts[grp] + local, 0).astype(np.int32)
+        if pad_blocks_to:
+            extra = -len(bg_np) % int(pad_blocks_to)
+            if extra:
+                bg_np = np.concatenate(
+                    [bg_np,
+                     np.full(extra, self.num_groups, np.int32)])
+                src_np = np.concatenate(
+                    [src_np, np.zeros(extra * bs, np.int32)])
+                valid_np = np.concatenate(
+                    [valid_np, np.zeros(extra * bs, bool)])
+        src = jnp.asarray(src_np)
         cols = {k: v[src] for k, v in self.table.columns.items()}
         valid = jnp.asarray(valid_np)
         if base_mask is not None:
             valid = valid & jnp.asarray(base_mask)[src]
-        return cols, valid, block_gids
+        return cols, valid, jnp.asarray(bg_np)
+
+    def sharded_blocks(self, mesh: Mesh, row_axes=("data",),
+                       block_size: int = 4096,
+                       base_mask: jax.Array | None = None):
+        """:meth:`aligned_blocks` distributed across the mesh's row axes.
+
+        The block count is padded to a multiple of the segment count and
+        the rows / validity mask / block-gid vector are placed with
+        contiguous whole-block chunks per device, so each segment owns an
+        integral run of group-aligned blocks — the MADlib two-phase
+        layout: every segment folds its local blocks, per-group partial
+        states merge across segments with the aggregate's combinators.
+        """
+        from ..distributed.sharding import distribute_rows, row_sharding
+        row_axes = tuple(row_axes)
+        segs = int(np.prod([mesh.shape[a] for a in row_axes]))
+        cols, valid, bgids = self.aligned_blocks(
+            block_size, base_mask, pad_blocks_to=segs)
+        cols = distribute_rows(mesh, row_axes, dict(cols))
+        valid = jax.device_put(valid, row_sharding(mesh, row_axes))
+        bgids = jax.device_put(bgids, row_sharding(mesh, row_axes))
+        return cols, valid, bgids
 
 
 def synthetic_regression_table(

@@ -29,6 +29,30 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+def row_pspec(row_axes=("data",), ndim: int = 1) -> P:
+    """PartitionSpec splitting the leading (row) axis over ``row_axes``,
+    rest replicated — the in_spec of every row-leading array entering the
+    sharded engines' ``shard_map`` programs."""
+    return P(tuple(row_axes), *([None] * (ndim - 1)))
+
+
+def row_sharding(mesh: Mesh, row_axes=("data",), ndim: int = 1
+                 ) -> NamedSharding:
+    """NamedSharding that partitions the leading (row) axis over
+    ``row_axes`` and replicates the rest — the placement of every
+    DISTRIBUTED BY table column, grouped block layout and base mask
+    (``Table.distribute``, ``GroupedView.sharded_blocks``, the sharded
+    engines' ``mask=``)."""
+    return NamedSharding(mesh, row_pspec(row_axes, ndim))
+
+
+def distribute_rows(mesh: Mesh, row_axes, columns: dict) -> dict:
+    """device_put a dict of row-leading arrays with :func:`row_sharding`.
+    Leading axes must divide the product of the ``row_axes`` extents."""
+    return {k: jax.device_put(v, row_sharding(mesh, row_axes, v.ndim))
+            for k, v in columns.items()}
+
+
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),
     "fsdp": "data",

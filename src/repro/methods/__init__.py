@@ -26,7 +26,10 @@ GROUP BY execution goes through the partitioned grouped-scan core
 methods never build their own per-group equality masks over the id
 column (CI greps for it).  One-pass grouped forms:
 ``naive_bayes_grouped``, ``quantiles_grouped``,
-``countmin_sketch_grouped``, ``fm_distinct_count_grouped``.
+``countmin_sketch_grouped``, ``fm_distinct_count_grouped``.  Every
+grouped wrapper forwards ``mesh=`` (defaulting to the table's) to the
+sharded grouped engine, so GROUP BY methods scale across the mesh with
+no per-method code.
 """
 
 from . import (  # noqa: F401

@@ -375,12 +375,14 @@ def kmeans_grouped(table: Table, key_col: str, k: int,
                    num_groups: int | None = None, *,
                    init_centroids: jax.Array, max_iters: int = 50,
                    reassign_frac_tol: float = 0.0,
-                   x_col: str = "x") -> KMeansResult:
+                   x_col: str = "x", mesh=None) -> KMeansResult:
     """One k-means model per group in shared scans (GROUP BY fitting).
 
     ``init_centroids`` is required — either one ``(k, d)`` seeding shared
     by every group or a stacked ``(G, k, d)`` per-group seeding.  Returns
-    a :class:`KMeansResult` whose fields carry a leading group axis."""
+    a :class:`KMeansResult` whose fields carry a leading group axis.
+    ``mesh`` (defaulting to the table's) runs the whole grouped Lloyd
+    loop on the sharded segment layout."""
     t = Table({"x": table[x_col], key_col: table[key_col]}, table.mesh,
               table.row_axes)
     init_centroids = jnp.asarray(init_centroids)
@@ -392,7 +394,8 @@ def kmeans_grouped(table: Table, key_col: str, k: int,
                 "it": jnp.zeros((init_centroids.shape[0],), jnp.int32)}
     n = t.n_rows
     res = fit_grouped(task, t, key_col, num_groups, max_iters=max_iters,
-                      tol=reassign_frac_tol + 0.5 / n, warm_start=warm)
+                      tol=reassign_frac_tol + 0.5 / n, warm_start=warm,
+                      mesh=mesh)
     sse = res.trace[np.arange(len(res.n_iters)), res.n_iters - 1] \
         if res.trace.size else res.trace
     return KMeansResult(res.state["cents"], sse, res.n_iters,

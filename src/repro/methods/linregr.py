@@ -138,11 +138,15 @@ def linregr(table: Table, *, x_col: str = "x", y_col: str = "y",
 def linregr_grouped(table: Table, key_col: str,
                     num_groups: int | None = None, *, x_col: str = "x",
                     y_col: str = "y", block_size: int | None = None,
-                    use_kernel: bool | str = False) -> LinregrResult:
+                    use_kernel: bool | str = False,
+                    mesh=None) -> LinregrResult:
     """``SELECT g, (linregr(y, x)).* FROM data GROUP BY g`` — one model per
-    group in a shared scan; every result field has a leading group axis."""
+    group in a shared scan; every result field has a leading group axis.
+    ``mesh`` (defaulting to the table's) runs the scan on the sharded
+    grouped engine."""
     t = Table({"x": table[x_col], "y": table[y_col],
                key_col: table[key_col]}, table.mesh, table.row_axes)
     res = fit_grouped(LinregrTask(use_kernel), t, key_col, num_groups,
-                      max_iters=1, tol=None, block_size=block_size)
+                      max_iters=1, tol=None, block_size=block_size,
+                      mesh=mesh)
     return res.result

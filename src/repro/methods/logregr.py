@@ -141,15 +141,18 @@ def logregr_grouped(table: Table, key_col: str,
                     num_groups: int | None = None, *,
                     x_col: str = "x", y_col: str = "y",
                     max_iters: int = 30, tol: float = 1e-6,
-                    block_size: int | None = None) -> LogregrResult:
+                    block_size: int | None = None,
+                    mesh=None) -> LogregrResult:
     """One logistic model per group, fit in shared scans
     (``SELECT g, (logregr(y, x)).* FROM data GROUP BY g``).  Every field
     of the result carries a leading group axis; ``n_iters``/``converged``
-    are per-group vectors."""
+    are per-group vectors.  ``mesh`` (defaulting to the table's) runs the
+    whole frozen-group IRLS loop inside one ``shard_map`` program."""
     t = Table({"x": table[x_col], "y": table[y_col],
                key_col: table[key_col]}, table.mesh, table.row_axes)
     res = fit_grouped(IRLSTask(), t, key_col, num_groups,
-                      max_iters=max_iters, tol=tol, block_size=block_size)
+                      max_iters=max_iters, tol=tol, block_size=block_size,
+                      mesh=mesh)
     return _result(res)
 
 

@@ -80,14 +80,16 @@ def naive_bayes_fit(table: Table, num_classes: int, *,
 def naive_bayes_grouped(table: Table, key_col: str, num_classes: int,
                         num_groups: int | None = None, *,
                         block_size: int | None = None,
-                        method: str = "auto") -> NaiveBayesModel:
+                        method: str = "auto", mesh=None) -> NaiveBayesModel:
     """``SELECT g, naive_bayes(...) FROM data GROUP BY g`` — one NB model
     per group through the partitioned grouped-scan core; every model field
-    carries a leading group axis."""
+    carries a leading group axis.  ``mesh`` (defaulting to the table's)
+    engages the sharded grouped engine."""
     t = Table({"x": table["x"], "y": table["y"], key_col: table[key_col]},
               table.mesh, table.row_axes)
     return run_grouped(NaiveBayesAggregate(num_classes), t, key_col,
-                       num_groups, block_size=block_size, method=method)
+                       num_groups, block_size=block_size, method=method,
+                       mesh=mesh)
 
 
 @jax.jit

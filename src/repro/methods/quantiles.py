@@ -86,13 +86,15 @@ def quantiles(table: Table, qs, *, value_col: str = "v", bins: int = 4096,
 
 def quantiles_grouped(table: Table, key_col: str, qs, *,
                       num_groups: int | None = None, value_col: str = "v",
-                      bins: int = 4096, block_size: int | None = None
-                      ) -> jax.Array:
+                      bins: int = 4096, block_size: int | None = None,
+                      mesh=None) -> jax.Array:
     """Per-group approximate quantiles (``... GROUP BY g``), two grouped
     passes through the partitioned core: a grouped profile fixes each
     group's range, then one grouped histogram pass bins every row against
     its own group's range.  Returns ``(num_groups, len(qs))``; groups with
-    no rows yield non-finite values (their range is empty)."""
+    no rows yield non-finite values (their range is empty).  Both passes
+    run on the sharded grouped engine when ``mesh`` (defaulting to the
+    table's) is set, still sharing one partitioning sort."""
     gcol = table[key_col]
     # one partitioning sort, shared by both grouped passes; the group id
     # rides along as a data column for the histogram's range lookup
@@ -100,10 +102,10 @@ def quantiles_grouped(table: Table, key_col: str, qs, *,
               table.mesh, table.row_axes)
     view = t.group_by(key_col, num_groups)
     prof = run_grouped(ProfileAggregate(), view.select(value_col),
-                       block_size=block_size)[value_col]
+                       block_size=block_size, mesh=mesh)[value_col]
     lo, hi = prof["min"], prof["max"]
     hist = run_grouped(GroupedHistogramAggregate(lo, hi, bins, value_col),
-                       view, block_size=block_size)
+                       view, block_size=block_size, mesh=mesh)
     qs = jnp.asarray(qs, jnp.float32)
     return jax.vmap(
         lambda h, l, u: _interp_quantiles(h, l, u, qs, bins))(hist, lo, hi)

@@ -151,27 +151,32 @@ def countmin_sketch_grouped(table: Table, key_col: str,
                             num_groups: int | None = None, *,
                             depth: int = 4, width: int = 1024,
                             item_col: str = "item",
-                            block_size: int | None = None) -> jax.Array:
+                            block_size: int | None = None,
+                            mesh=None) -> jax.Array:
     """One Count-Min sketch per group (``GROUP BY`` frequency sketching):
     a ``(num_groups, depth, width)`` counter stack from one partitioned
     grouped scan.  Counters are integers, so the grouped result is
-    bit-identical to sketching each group's rows alone."""
+    bit-identical to sketching each group's rows alone — on the sharded
+    grouped engine (``mesh``, defaulting to the table's) too."""
     t = Table({item_col: table[item_col], key_col: table[key_col]},
               table.mesh, table.row_axes)
     return run_grouped(CountMinAggregate(depth, width, item_col=item_col),
-                       t, key_col, num_groups, block_size=block_size)
+                       t, key_col, num_groups, block_size=block_size,
+                       mesh=mesh)
 
 
 def fm_distinct_count_grouped(table: Table, key_col: str,
                               num_groups: int | None = None, *,
                               num_hashes: int = 8, bits: int = 32,
                               item_col: str = "item",
-                              block_size: int | None = None) -> jax.Array:
+                              block_size: int | None = None,
+                              mesh=None) -> jax.Array:
     """Per-group Flajolet-Martin distinct-count estimates
     (``SELECT g, count(DISTINCT item) GROUP BY g``, approximated): the
-    max-merge bitmaps segment-fold in one grouped scan; returns a
-    ``(num_groups,)`` estimate vector."""
+    max-merge bitmaps segment-fold in one grouped scan (sharded across
+    ``mesh`` when given); returns a ``(num_groups,)`` estimate vector."""
     t = Table({item_col: table[item_col], key_col: table[key_col]},
               table.mesh, table.row_axes)
     return run_grouped(FMAggregate(num_hashes, bits, item_col=item_col),
-                       t, key_col, num_groups, block_size=block_size)
+                       t, key_col, num_groups, block_size=block_size,
+                       mesh=mesh)

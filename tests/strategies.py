@@ -1,0 +1,117 @@
+"""Seeded, hypothesis-free property-test strategies.
+
+The container image carries no ``hypothesis``; this module gives the
+property suite the same input diversity with explicit, reproducible
+seeding: every case is a :class:`Draw` derived from ``(base_seed,
+case_index)``, and assertion messages should embed ``draw.seed`` so any
+failure replays with ``Draw(seed)``.
+
+Generators cover the shapes the engine contract cares about:
+
+* table sizes / feature dims (ragged block tails included),
+* group layouts — uniform, zipf-skewed, empty groups, singleton groups,
+  non-contiguous (round-robin) ids, and everything-in-one-group,
+* dyadic-exact feature draws (small multiples of ``1/denom``), whose f32
+  sums and pairwise products are exact so fold ORDER cannot change any
+  aggregate state — the input class that turns allclose engine-parity
+  checks into bit-identical ones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["Draw", "cases", "group_layout", "GROUP_PATTERNS"]
+
+GROUP_PATTERNS = ("uniform", "skewed", "empty", "singleton",
+                  "non_contiguous", "one_group")
+
+
+class Draw:
+    """One generated case: a seeded ``np.random.Generator`` with the
+    draw helpers property tests need.  ``Draw(seed)`` replays a case."""
+
+    def __init__(self, seed: int):
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+
+    def __repr__(self):  # shows up in assertion messages
+        return f"Draw(seed={self.seed})"
+
+    # -- scalars -----------------------------------------------------------
+    def integers(self, lo: int, hi: int) -> int:
+        """Uniform int in [lo, hi] inclusive."""
+        return int(self.rng.integers(lo, hi + 1))
+
+    def floats(self, lo: float, hi: float) -> float:
+        return float(lo + (hi - lo) * self.rng.random())
+
+    def sample(self, seq):
+        return seq[int(self.rng.integers(0, len(seq)))]
+
+    # -- arrays ------------------------------------------------------------
+    def normal(self, shape, dtype=np.float32) -> np.ndarray:
+        return self.rng.standard_normal(shape).astype(dtype)
+
+    def uniform(self, shape, lo=0.0, hi=1.0, dtype=np.float32) -> np.ndarray:
+        return (lo + (hi - lo) * self.rng.random(shape)).astype(dtype)
+
+    def ints(self, shape, lo: int, hi: int) -> np.ndarray:
+        """Uniform int array in [lo, hi] inclusive."""
+        return self.rng.integers(lo, hi + 1, size=shape).astype(np.int32)
+
+    def bools(self, shape, p: float = 0.5) -> np.ndarray:
+        return self.rng.random(shape) < p
+
+    def dyadic(self, shape, denom: int = 8, scale: float = 1.0
+               ) -> np.ndarray:
+        """~N(0, scale) rounded to multiples of 1/denom: exactly
+        representable in f32, with exact sums/products at test sizes."""
+        v = np.round(self.rng.standard_normal(shape) * scale * denom)
+        return (v / denom).astype(np.float32)
+
+    def permutation(self, n: int) -> np.ndarray:
+        return self.rng.permutation(n)
+
+
+def cases(n_cases: int = 10, base_seed: int = 0):
+    """Iterate ``n_cases`` independent :class:`Draw` objects.  The seed
+    mixing keeps different (test, base_seed) streams disjoint."""
+    for i in range(n_cases):
+        yield Draw(base_seed * 1_000_003 + i)
+
+
+def group_layout(draw: Draw, n: int, num_groups: int,
+                 pattern: str | None = None):
+    """A ``(n,)`` int32 group-id column exercising one GROUP BY layout
+    class; returns ``(gids, pattern)``.
+
+    Patterns: ``uniform`` ids; ``skewed`` zipf-ish sizes (a few big
+    segments, a long tail); ``empty`` leaves at least one id unused;
+    ``singleton`` pins one group to exactly one row; ``non_contiguous``
+    round-robins ids so no group's rows are adjacent; ``one_group`` puts
+    every row in a single id.
+    """
+    G = max(1, int(num_groups))
+    if pattern is None:
+        pattern = draw.sample(GROUP_PATTERNS)
+    if pattern == "uniform":
+        gids = draw.ints((n,), 0, G - 1)
+    elif pattern == "skewed":
+        w = 1.0 / (np.arange(G) + 1.0)
+        gids = draw.rng.choice(G, size=n, p=w / w.sum()).astype(np.int32)
+    elif pattern == "empty":
+        used = max(1, G - max(1, G // 3))  # ids [used, G) stay empty
+        gids = draw.ints((n,), 0, used - 1)
+    elif pattern == "singleton":
+        gids = draw.ints((n,), 0, G - 1)
+        solo = draw.integers(0, G - 1)
+        gids[gids == solo] = (solo + 1) % G if G > 1 else 0
+        gids[draw.integers(0, n - 1)] = solo  # exactly one row
+    elif pattern == "non_contiguous":
+        gids = (np.arange(n) % G).astype(np.int32)
+    elif pattern == "one_group":
+        gids = np.full((n,), draw.integers(0, G - 1), np.int32)
+    else:
+        raise ValueError(f"unknown group pattern {pattern!r}")
+    return gids.astype(np.int32), pattern

@@ -1,0 +1,193 @@
+"""Engine-parity matrix: every one-pass method × every execution engine.
+
+The framework's correctness argument is that HOW an aggregate executes —
+local blocked fold, host-side stream, sharded two-phase fold, partitioned
+grouped segments, masked per-group vmap, or the sharded grouped engine —
+never changes WHAT it computes.  This suite pins that down as a matrix:
+for each one-pass method and each generated group layout
+(``tests/strategies.py``: empty / singleton / non-contiguous / skewed
+groups), all six engines must produce the per-group solo fold's state —
+BIT-IDENTICAL for exact-state cases (integer sketches, dyadic-exact
+features, min/max extremes), allclose for ordinary f32 data.
+
+States are compared rather than finals (``_RawState`` makes ``final``
+the identity) so the check isolates the fold/merge contract — the part
+each engine implements differently — from the shared ``final`` math
+(whose batched-vs-solo ulp wiggle, e.g. vmapped ``eigh``, is covered by
+the grouped oracle tests).
+"""
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Table, run_grouped, run_local, run_sharded, \
+    run_stream
+from repro.core.aggregates import Aggregate
+from repro.core.templates import ProfileAggregate
+from repro.methods.linregr import LinregrAggregate
+from repro.methods.naive_bayes import NaiveBayesAggregate
+from repro.methods.sketches import CountMinAggregate, FMAggregate
+
+from strategies import Draw, group_layout
+
+N, G = 160, 4
+STREAM_BS = 48
+
+ENGINES = ("local", "stream", "sharded", "grouped-segment",
+           "grouped-masked", "sharded-grouped")
+
+
+class _RawState(Aggregate):
+    """final = identity wrapper: engines return raw fold states, so the
+    matrix compares exactly the engine-specific part of the pipeline."""
+
+    def __init__(self, inner: Aggregate):
+        self.inner = inner
+
+    @property
+    def merge_ops(self):
+        return self.inner.merge_ops
+
+    def init(self, block):
+        return self.inner.init(block)
+
+    def transition(self, state, block, mask):
+        return self.inner.transition(state, block, mask)
+
+    def merge(self, a, b):
+        return self.inner.merge(a, b)
+
+    def segment_ops(self, state):
+        return self.inner.segment_ops(state)
+
+    def mesh_merge(self, state, axes):
+        return self.inner.mesh_merge(state, axes)
+
+    def final(self, state):
+        return state
+
+
+# name -> (columns builder, aggregate factory, exact-state?)
+def _linregr_cols(draw):
+    return {"x": draw.dyadic((N, 3)), "y": draw.dyadic((N,))}
+
+
+def _profile_cols(draw):
+    return {"v": draw.dyadic((N,)), "w": draw.dyadic((N, 2))}
+
+
+def _profile_f32_cols(draw):
+    return {"v": draw.normal((N,))}
+
+
+def _nb_cols(draw):
+    return {"x": draw.dyadic((N, 3)),
+            "y": draw.ints((N,), 0, 2).astype(np.float32)}
+
+
+def _item_cols(draw):
+    return {"item": draw.ints((N,), 0, 40)}
+
+
+CASES = {
+    "linregr": (_linregr_cols, LinregrAggregate, True),
+    "profile": (_profile_cols, ProfileAggregate, True),
+    "profile_f32": (_profile_f32_cols, ProfileAggregate, False),
+    "naive_bayes": (_nb_cols, lambda: NaiveBayesAggregate(3), True),
+    "countmin": (_item_cols, lambda: CountMinAggregate(4, 128), True),
+    "fm": (_item_cols, lambda: FMAggregate(4, 16), True),
+}
+
+PATTERNS = ("empty", "singleton", "non_contiguous", "skewed")
+
+
+def _assert_leaves(got, want, exact, msg):
+    gl, wl = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert len(gl) == len(wl), msg
+    for a, b in zip(gl, wl):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=msg)
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=msg)
+
+
+def _stack(trees):
+    return jax.tree.map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_engine_parity_matrix(name, pattern, mesh1):
+    build, make_agg, exact = CASES[name]
+    draw = Draw(zlib.crc32(f"{name}/{pattern}".encode()))
+    gids_np, _ = group_layout(draw, N, G, pattern)
+    cols = {k: jnp.asarray(v) for k, v in build(draw).items()}
+    gids = jnp.asarray(gids_np)
+    tbl = Table.from_columns(dict(cols, g=gids))
+    data_tbl = Table.from_columns(cols)
+    dist_tbl = data_tbl.distribute(mesh1)
+
+    # the per-group solo oracle == the "local" engine (masked fold)
+    ref = _stack([run_local(_RawState(make_agg()), data_tbl,
+                            mask=gids == g) for g in range(G)])
+
+    # stream: per group, the group's own rows in host-side blocks
+    got_stream, stream_groups = [], []
+    for g in range(G):
+        rows = np.where(gids_np == g)[0]
+        if not len(rows):
+            continue  # run_stream rejects empty streams by contract
+        sub = {k: np.asarray(v)[rows] for k, v in cols.items()}
+        blocks = [{k: v[i:i + STREAM_BS] for k, v in sub.items()}
+                  for i in range(0, len(rows), STREAM_BS)]
+        got_stream.append(run_stream(_RawState(make_agg()), iter(blocks)))
+        stream_groups.append(g)
+    ref_stream = jax.tree.map(lambda x: x[np.asarray(stream_groups)], ref)
+    _assert_leaves(_stack(got_stream), ref_stream, exact,
+                   f"stream {name}/{pattern} {draw}")
+
+    # sharded: two-phase fold with the new fold-level base mask
+    got_sharded = _stack([
+        run_sharded(_RawState(make_agg()), dist_tbl, mask=gids == g)
+        for g in range(G)])
+    _assert_leaves(got_sharded, ref, exact,
+                   f"sharded {name}/{pattern} {draw}")
+
+    # grouped engines: segment core, masked fallback, sharded grouped
+    grouped_runs = {
+        "grouped-segment": dict(method="segment"),
+        "grouped-masked": dict(method="masked"),
+        "sharded-grouped": dict(method="segment", mesh=mesh1),
+    }
+    for engine, kw in grouped_runs.items():
+        got = run_grouped(_RawState(make_agg()), tbl, "g", G, **kw)
+        _assert_leaves(got, ref, exact, f"{engine} {name}/{pattern} {draw}")
+
+
+def test_final_results_ride_the_states(mesh1):
+    """End-to-end spot check that engine-level state parity carries to the
+    user-facing results: grouped profile finals equal the vmapped final
+    of the solo states on every engine that stacks per-group output."""
+    draw = Draw(99)
+    gids_np, _ = group_layout(draw, N, G, "skewed")
+    tbl = Table.from_columns({"v": jnp.asarray(draw.dyadic((N,))),
+                              "g": jnp.asarray(gids_np)})
+    data = Table.from_columns({"v": tbl["v"]})
+    agg = ProfileAggregate()
+    states = _stack([run_local(_RawState(ProfileAggregate()), data,
+                               mask=tbl["g"] == g) for g in range(G)])
+    want = jax.vmap(agg.final)(jax.tree.map(jnp.asarray, states))
+    for kw in (dict(method="segment"), dict(method="masked"),
+               dict(method="segment", mesh=mesh1)):
+        got = run_grouped(ProfileAggregate(), tbl, "g", G, **kw)
+        for stat in ("count", "sum", "mean", "std", "min", "max"):
+            np.testing.assert_allclose(
+                np.asarray(got["v"][stat]), np.asarray(want["v"][stat]),
+                rtol=1e-6, atol=1e-6, err_msg=f"{kw} {stat}")

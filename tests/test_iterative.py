@@ -79,6 +79,44 @@ def test_sharded_engine_matches_local(cls_table, mesh1):
     assert sharded.converged
 
 
+def test_sharded_engine_mask_matches_local(cls_table, mesh1):
+    """fit's sharded engine now honors mask= (fold-level base filter):
+    fitting the even rows sharded == fitting them locally."""
+    tbl, _ = cls_table
+    mask = jnp.arange(tbl.n_rows) % 2 == 0
+    local = fit(IRLSTask(), tbl, max_iters=30, mask=mask)
+    sharded = fit(IRLSTask(), tbl.distribute(mesh1), max_iters=30,
+                  mask=mask, block_size=512)
+    np.testing.assert_allclose(np.asarray(local.state["beta"]),
+                               np.asarray(sharded.state["beta"]),
+                               rtol=1e-4, atol=1e-5)
+    assert local.n_iters == sharded.n_iters
+
+
+def test_fit_grouped_sharded_segment_matches_local(key, mesh1):
+    """fit_grouped(mesh=) — the whole frozen-group loop in one shard_map
+    program — reproduces the local segment layout's per-group models,
+    iteration counts and active-row trace."""
+    n, d, G = 1536, 3, 4
+    kx, kg, ku = jax.random.split(key, 3)
+    x = jnp.round(jax.random.normal(kx, (n, d)) * 8) / 8
+    g = jax.random.randint(kg, (n,), 0, G)
+    p = jax.nn.sigmoid(x @ jnp.ones((d,)))
+    y = (jax.random.uniform(ku, (n,)) < p).astype(jnp.float32)
+    tbl = Table.from_columns({"x": x, "y": y, "g": g})
+    loc = fit_grouped(IRLSTask(), tbl, "g", G, max_iters=25, tol=1e-6,
+                      block_size=128)
+    sh = fit_grouped(IRLSTask(), tbl, "g", G, max_iters=25, tol=1e-6,
+                     block_size=128, mesh=mesh1)
+    assert sh.stats["layout"] == "segment" and sh.stats["sharded"]
+    np.testing.assert_array_equal(loc.n_iters, sh.n_iters)
+    np.testing.assert_array_equal(np.asarray(loc.stats["active_rows"]),
+                                  np.asarray(sh.stats["active_rows"]))
+    np.testing.assert_allclose(np.asarray(loc.state["beta"]),
+                               np.asarray(sh.state["beta"]),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_warm_start_skips_iterations(cls_table):
     tbl, _ = cls_table
     cold = logregr(tbl, max_iters=30)

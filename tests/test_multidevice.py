@@ -33,17 +33,36 @@ def run_py(code: str, timeout=420):
 def test_sharded_uda_8dev():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import run_local, run_sharded, \\
+        from repro.core import fit, run_local, run_sharded, \\
             synthetic_regression_table
         from repro.methods.linregr import LinregrAggregate
+        from repro.methods.logregr import IRLSTask
         tbl, _ = synthetic_regression_table(jax.random.PRNGKey(0), 8192, 16)
         from repro.core.compat import make_mesh
         mesh = make_mesh((8,), ("data",))
         local = run_local(LinregrAggregate(), tbl)
-        sharded = run_sharded(LinregrAggregate(), tbl.distribute(mesh),
-                              block_size=256)
+        dist = tbl.distribute(mesh)
+        sharded = run_sharded(LinregrAggregate(), dist, block_size=256)
         np.testing.assert_allclose(np.asarray(local.coef),
                                    np.asarray(sharded.coef),
+                                   rtol=1e-4, atol=1e-5)
+        # mask= chunks alongside the rows: fold-level base filter parity
+        mask = jnp.arange(tbl.n_rows) % 3 == 0
+        lm = run_local(LinregrAggregate(), tbl, mask=mask)
+        sm = run_sharded(LinregrAggregate(), dist, mask=mask,
+                         block_size=256)
+        np.testing.assert_allclose(np.asarray(lm.coef),
+                                   np.asarray(sm.coef),
+                                   rtol=1e-4, atol=1e-5)
+        assert float(sm.num_rows) == float(mask.sum())
+        y = (tbl["y"] > 0).astype(jnp.float32)
+        ctbl = tbl.with_column("y", y)
+        fl = fit(IRLSTask(), ctbl, max_iters=20, mask=mask)
+        fs = fit(IRLSTask(), ctbl.distribute(mesh), max_iters=20,
+                 mask=mask, block_size=256)
+        assert fl.n_iters == fs.n_iters
+        np.testing.assert_allclose(np.asarray(fl.state["beta"]),
+                                   np.asarray(fs.state["beta"]),
                                    rtol=1e-4, atol=1e-5)
         print("OK", len(jax.devices()))
     """)
@@ -80,6 +99,121 @@ def test_splitk_decode_seq_sharded_8dev():
         print("SPLITK-OK")
     """)
     assert "SPLITK-OK" in out
+
+
+def test_sharded_grouped_uda_8dev():
+    """run_grouped(mesh=) across 8 devices is BIT-IDENTICAL to the local
+    segment fold for exact-state aggregates (dyadic linregr, integer
+    Count-Min), and the sharded masked fallback serves generic merges."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Table, run_grouped
+        from repro.core.compat import make_mesh
+        from repro.methods.linregr import LinregrAggregate
+        from repro.methods.sketches import CountMinAggregate
+        mesh = make_mesh((8,), ("data",))
+        k = jax.random.PRNGKey(0)
+        n, d, G = 4001, 4, 7
+        kx, ky, kg, ki = jax.random.split(k, 4)
+        x = jnp.round(jax.random.normal(kx, (n, d)) * 8) / 8
+        y = jnp.round(jax.random.normal(ky, (n,)) * 8) / 8
+        g = jax.random.randint(kg, (n,), 0, G - 2)   # two groups empty
+        item = jax.random.randint(ki, (n,), 0, 500)
+        tbl = Table.from_columns({"x": x, "y": y, "g": g, "item": item})
+        for agg in (LinregrAggregate(), CountMinAggregate(4, 256)):
+            loc = run_grouped(agg, tbl, "g", G, method="segment",
+                              block_size=128)
+            sh = run_grouped(agg, tbl, "g", G, method="segment",
+                             block_size=128, mesh=mesh)
+            for a, b in zip(jax.tree.leaves(loc), jax.tree.leaves(sh)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # generic-merge fallback takes the sharded masked path
+        from repro.methods.kmeans import GumbelPickAggregate
+        t2 = Table.from_columns({
+            "x": x, "d2": jnp.ones((n,)),
+            "__row__": jnp.arange(n, dtype=jnp.int32), "g": g})
+        agg = GumbelPickAggregate(jax.random.PRNGKey(1), d)
+        o_sh = run_grouped(agg, t2, "g", G, mesh=mesh)
+        o_lo = run_grouped(agg, t2, "g", G, mesh=None)
+        for a, b in zip(jax.tree.leaves(o_sh), jax.tree.leaves(o_lo)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        print("GROUPED-OK", len(jax.devices()))
+    """)
+    assert "GROUPED-OK 8" in out
+
+
+def test_sharded_fit_grouped_8dev():
+    """fit_grouped(mesh=) runs the whole frozen-group loop in one
+    shard_map program with per-group n_iters parity vs local: exact on a
+    deterministic countdown task, and matching IRLS models/iteration
+    counts on a real grouped logistic fit."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import IterativeTask, Table, fit_grouped
+        from repro.core.aggregates import Aggregate, MERGE_SUM
+        from repro.core.compat import make_mesh
+        from repro.methods.logregr import IRLSTask
+        mesh = make_mesh((8,), ("data",))
+
+        class MeanAgg(Aggregate):
+            merge_ops = MERGE_SUM
+            def init(self, block):
+                return {"s": jnp.zeros(()), "n": jnp.zeros(())}
+            def transition(self, state, block, mask):
+                m = mask.astype(jnp.float32)
+                return {"s": state["s"] + jnp.sum(block["k"] * m),
+                        "n": state["n"] + jnp.sum(m)}
+            def final(self, s):
+                return s["s"] / jnp.maximum(s["n"], 1.0)
+
+        class Countdown(IterativeTask):
+            def init_state(self, columns):
+                return {"it": jnp.zeros(())}
+            def make_aggregate(self, state):
+                return MeanAgg()
+            def update(self, state, out):
+                return {"it": state["it"] + 1.0}
+            def metric(self, prev, new, out):
+                return out - new["it"]
+
+        # group i's mean(k) == i + 1 exactly -> converges after i+1 rounds
+        G, per = 6, 600
+        g = jnp.repeat(jnp.arange(G, dtype=jnp.int32), per)
+        tbl = Table.from_columns({"k": (g + 1).astype(jnp.float32),
+                                  "g": g})
+        loc = fit_grouped(Countdown(), tbl, "g", G, max_iters=20, tol=0.5,
+                          block_size=64)
+        sh = fit_grouped(Countdown(), tbl, "g", G, max_iters=20, tol=0.5,
+                         block_size=64, mesh=mesh)
+        np.testing.assert_array_equal(loc.n_iters, np.arange(1, G + 1))
+        np.testing.assert_array_equal(sh.n_iters, loc.n_iters)
+        np.testing.assert_array_equal(sh.stats["active_rows"],
+                                      loc.stats["active_rows"])
+        assert sh.stats["sharded"] and not loc.stats["sharded"]
+
+        # real model: grouped IRLS, per-group n_iters + coefficient parity
+        k = jax.random.PRNGKey(0)
+        n, d, G2 = 4096, 4, 5
+        kx, kg, ku = jax.random.split(k, 3)
+        x = jnp.round(jax.random.normal(kx, (n, d)) * 8) / 8
+        gid = jax.random.randint(kg, (n,), 0, G2)
+        b = 1.0 + jnp.arange(G2, dtype=jnp.float32)[:, None] \\
+            * jnp.ones((G2, d)) * 0.3
+        p = jax.nn.sigmoid(jnp.sum(x * b[gid], -1))
+        y = (jax.random.uniform(ku, (n,)) < p).astype(jnp.float32)
+        ftbl = Table.from_columns({"x": x, "y": y, "g": gid})
+        rl = fit_grouped(IRLSTask(), ftbl, "g", G2, max_iters=30,
+                         tol=1e-6, block_size=128)
+        rs = fit_grouped(IRLSTask(), ftbl, "g", G2, max_iters=30,
+                         tol=1e-6, block_size=128, mesh=mesh)
+        np.testing.assert_array_equal(rl.n_iters, rs.n_iters)
+        np.testing.assert_allclose(np.asarray(rl.state["beta"]),
+                                   np.asarray(rs.state["beta"]),
+                                   rtol=1e-4, atol=1e-6)
+        print("FITGROUPED-OK", loc.n_iters.tolist(), rl.n_iters.tolist())
+    """)
+    assert "FITGROUPED-OK" in out
 
 
 def test_compressed_psum_8dev():
