@@ -7,6 +7,8 @@
 #                        two-pass vs fused single pass
 #   bench_profile     — §Table 1 profile: shared-scan fused aggregates
 #                        (pass count + wall time) vs scan-per-aggregate
+#   bench_plan        — §3.2 declarative batches: planned (scan-sharing
+#                        optimizer) vs naive per-statement execution
 #   bench_sgd_models  — Table 2 (six models, one SGD abstraction)
 #   bench_text        — Table 3 (feature extraction, Viterbi, MCMC,
 #                        q-gram matching)
@@ -20,13 +22,14 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_linregr, bench_iterative, bench_profile, \
-        bench_sgd_models, bench_text, roofline
+    from . import bench_linregr, bench_iterative, bench_plan, \
+        bench_profile, bench_sgd_models, bench_text, roofline
 
     suites = [
         ("bench_linregr", bench_linregr.run),
         ("bench_iterative", bench_iterative.run),
         ("bench_profile", bench_profile.run),
+        ("bench_plan", bench_plan.run),
         ("bench_sgd_models", bench_sgd_models.run),
         ("bench_text", bench_text.run),
         ("roofline", roofline.run),

@@ -1,9 +1,14 @@
 """Quickstart: the MADlib analytics session from the paper, in MADJAX.
 
-Mirrors §4's worked examples:  load a table, run single-pass linear
-regression (the ``SELECT (linregr(y, x)).* FROM data`` of §4.1), the
+The interface is declarative (§3.2): you issue statements into a
+``Session``, the planner decides how to execute them — fusing every
+compatible one-pass statistic into ONE table scan, sharing partitioning
+sorts across grouped statements, and picking engines cost-based from the
+capability matrix.  ``explain()`` shows the physical plan, EXPLAIN-style.
+
+Mirrors §4's worked examples: single-pass linear regression (§4.1), the
 IRLS logistic driver (§4.2), k-means (§4.3), and the descriptive layer
-(profile + sketches + quantiles).
+(profile + sketches + quantiles) — batched.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,34 +16,58 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import Table, synthetic_classification_table, \
-    synthetic_regression_table
-from repro.methods.linregr import linregr
-from repro.methods.logregr import logregr
+from repro.core import Session, Table, trace_execution, \
+    synthetic_classification_table, synthetic_regression_table
 from repro.methods.kmeans import kmeans_fit
-from repro.methods.profile import profile
 from repro.methods.quantiles import quantiles
-from repro.methods.sketches import countmin_sketch, countmin_query, \
-    fm_distinct_count
+from repro.methods.sketches import countmin_query
 
 
 def main():
     key = jax.random.PRNGKey(0)
 
     # -- 1. "CREATE TABLE data AS ..." ------------------------------------
+    key, item_key = jax.random.split(key)
     tbl, b_true = synthetic_regression_table(key, 100_000, 8)
+    items = jax.random.randint(item_key, (100_000,), 0, 1000)
+    tbl = tbl.with_column("item", items)
     print(f"table: {tbl.n_rows} rows, columns {tbl.column_names}")
 
-    # -- 2. SELECT (linregr(y, x)).* FROM data ----------------------------
-    res = linregr(tbl, block_size=8192)
+    # -- 2. a declarative batch: four statements, ONE data pass -----------
+    sess = Session()
+    h_prof = sess.profile(tbl)
+    h_ols = sess.linregr(tbl)
+    h_cm = sess.countmin_sketch(tbl, width=4096)
+    h_fm = sess.fm_distinct_count(tbl)
+
+    print("\n== EXPLAIN (the planner's physical plan) ==")
+    print(sess.explain())
+
+    with trace_execution() as t:
+        sess.run()
+    print(f"\nexecuted: {len(t.scans)} data pass(es) for 4 statements")
+
+    res = h_ols.result()
     print("\n== linregr (single-pass UDA, §4.1) ==")
     print("coef        :", [round(float(c), 3) for c in res.coef])
     print("true b      :", [round(float(c), 3) for c in b_true])
-    print(f"r2={float(res.r2):.5f}  condition_no={float(res.condition_no):.2f}")
+    print(f"r2={float(res.r2):.5f}  "
+          f"condition_no={float(res.condition_no):.2f}")
 
-    # -- 3. SELECT * FROM logregr('y', 'x', 'data') (IRLS driver, §4.2) ---
+    prof = h_prof.result()
+    print("\n== descriptive layer (same scan) ==")
+    print(f"profile(y): mean={float(prof['y']['mean']):.3f} "
+          f"std={float(prof['y']['std']):.3f}")
+    est = countmin_query(h_cm.result(), jnp.arange(5))
+    print("count-min top ids est:", [int(e) for e in est])
+    print(f"FM distinct estimate (true 1000): {float(h_fm.result()):.0f}")
+
+    # -- 3. iterative statements (driver pattern, §4.2) -------------------
     ctbl, cb = synthetic_classification_table(key, 50_000, 6)
-    lres = logregr(ctbl)
+    sess = Session()
+    h_log = sess.logregr(ctbl)
+    sess.run()
+    lres = h_log.result()
     print("\n== logregr (multipass IRLS driver, §4.2) ==")
     print(f"converged in {lres.n_iters} iterations; "
           f"coef err {float(jnp.linalg.norm(lres.coef - cb)):.3f}; "
@@ -54,20 +83,9 @@ def main():
     print(f"converged={km.converged} iters={km.n_iters} "
           f"sse_trace={[round(s) for s in km.sse_trace]}")
 
-    # -- 5. descriptive statistics (profile / sketches / quantiles) -------
-    items = jax.random.randint(kk[0], (200_000,), 0, 1000)
-    itbl = Table.from_columns({"item": items})
-    sk = countmin_sketch(itbl, depth=4, width=4096, block_size=65536)
-    est = countmin_query(sk, jnp.arange(5))
-    print("\n== descriptive layer ==")
-    print("count-min top ids est:", [int(e) for e in est])
-    print(f"FM distinct estimate (true 1000): "
-          f"{float(fm_distinct_count(itbl)):.0f}")
-    qs = quantiles(Table.from_columns({"v": tbl['y']}), [0.25, 0.5, 0.75])
-    print("y quartiles:", [round(float(q), 3) for q in qs])
-    prof = profile(tbl.select("y"))
-    print(f"profile(y): mean={float(prof['y']['mean']):.3f} "
-          f"std={float(prof['y']['std']):.3f}")
+    # -- 5. dependent passes plan sequentially (quantiles, §Table 1) ------
+    qs = quantiles(tbl.with_column("v", tbl["y"]), [0.25, 0.5, 0.75])
+    print("\ny quartiles:", [round(float(q), 3) for q in qs])
 
 
 if __name__ == "__main__":

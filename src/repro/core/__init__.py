@@ -1,5 +1,14 @@
 """MADJAX core: the paper's contribution as composable JAX modules.
 
+The stack is declarative-over-unified (§3.2; Feng et al.): methods emit
+**logical plan nodes** (:mod:`repro.core.plan` — ``ScanAgg``,
+``GroupedScanAgg``, ``IterativeFit``, ``StreamAgg``) and the planner
+fuses compatible statements into shared scans, dedups partitioning sorts
+through the memoized ``Table.group_by``, and picks engines cost-based
+from the capability matrix (``ENGINE_CAPS``, below) — ``explain()``
+renders the chosen physical plan like ``EXPLAIN``.  :class:`Session`
+is the analyst front-end: batch statements, explain, run.
+
 - Table          — sharded pytree-of-columns (macro-programming substrate)
 - Aggregate      — the (init, transition, merge, final) UDA pattern
 - FusedAggregate / run_many — shared-scan execution: N heterogeneous
@@ -25,7 +34,9 @@ The engine matrix — every workload is (execution engine) x (pass shape):
 Engine capabilities — which cross-cutting features each engine honors
 (``mask=`` is a base row filter applied at the fold level; ``group_by``
 means stacked per-group output; ``fit`` is iterative driving; ``stream``
-is out-of-core block iteration):
+is out-of-core block iteration).  The same matrix is exported as data
+(``ENGINE_CAPS``) and is what the planner filters candidate engines
+through before costing them:
 
   ===============  =====  ========  ==================  ======
   engine           mask   group_by  fit                 stream
@@ -131,8 +142,24 @@ from .convex import (
     sgd,
 )
 from .templates import ProfileAggregate, map_columns, one_hot_encode
+from .plan import (
+    ENGINE_CAPS,
+    GroupedScanAgg,
+    IterativeFit,
+    PhysicalPlan,
+    ScanAgg,
+    StreamAgg,
+    execute,
+    explain,
+    plan,
+)
+from .session import Handle, Session
+from .trace import Trace, trace_execution
 
 __all__ = [
+    "ENGINE_CAPS", "ScanAgg", "GroupedScanAgg", "IterativeFit",
+    "StreamAgg", "PhysicalPlan", "plan", "execute", "explain",
+    "Session", "Handle", "Trace", "trace_execution",
     "Table", "GroupedView", "Aggregate", "FusedAggregate", "MERGE_SUM",
     "MERGE_MAX", "MERGE_MIN",
     "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",

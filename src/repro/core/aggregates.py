@@ -52,6 +52,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..distributed.sharding import distribute_rows, row_pspec
 from .compat import shard_map as _compat_shard_map
 from .table import GroupedView, Table, Columns
+from .trace import record as _record
 
 S = TypeVar("S")  # transition state pytree
 R = TypeVar("R")  # result pytree
@@ -190,18 +191,49 @@ class FusedAggregate(Aggregate):
 
 
 def run_many(aggs, table: Table, *, block_size: int | None = None,
-             mask: jax.Array | None = None, jit: bool = True) -> Any:
+             mask: jax.Array | None = None, jit: bool = True,
+             engine: str = "auto") -> Any:
     """Execute several aggregates over ``table`` in ONE shared scan.
 
-    Picks the sharded engine when the table is distributed, the local one
-    otherwise.  Returns a dict when ``aggs`` is a mapping, else a tuple,
-    ordered like the input.
+    ``engine="auto"`` picks the sharded engine when the table is
+    distributed, the local one otherwise; ``"local"``/``"sharded"`` force
+    one — the hook the plan layer's cost-based selection drives (its
+    choice must be what executes, not re-derived here).  Returns a dict
+    when ``aggs`` is a mapping, else a tuple, ordered like the input.
     """
-    fused = FusedAggregate(aggs)
-    if table.mesh is not None:
+    fused = _fused_for(aggs)
+    if engine == "auto":
+        engine = "sharded" if table.mesh is not None else "local"
+    if engine == "sharded":
         return run_sharded(fused, table, block_size=block_size, mask=mask,
                            jit=jit)
+    if engine != "local":
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(use 'auto', 'local' or 'sharded')")
     return run_local(fused, table, block_size=block_size, mask=mask, jit=jit)
+
+
+# Prepared-statement memo: re-executing the same aggregate set reuses
+# ONE FusedAggregate instance, so the local engine's program cache
+# (static on the aggregate) hits instead of recompiling per call.  Keys
+# are member object ids; every entry pins its members, so a live entry's
+# ids can never be reused by new objects.  Bounded FIFO.
+_FUSED_CACHE: dict[tuple, FusedAggregate] = {}
+_FUSED_CACHE_MAX = 256
+
+
+def _fused_for(aggs) -> FusedAggregate:
+    if isinstance(aggs, Mapping):
+        key = tuple((k, id(a)) for k, a in aggs.items())
+    else:
+        key = tuple(id(a) for a in aggs)
+    fused = _FUSED_CACHE.get(key)
+    if fused is None:
+        fused = FusedAggregate(aggs)
+        if len(_FUSED_CACHE) >= _FUSED_CACHE_MAX:
+            _FUSED_CACHE.pop(next(iter(_FUSED_CACHE)))
+        _FUSED_CACHE[key] = fused
+    return fused
 
 
 def _combine_leaf(op: str, a, b):
@@ -258,15 +290,43 @@ def _blocked_fold(agg: Aggregate, columns: Columns, mask: jax.Array | None,
     return state
 
 
-def run_local(agg: Aggregate, table: Table, *, block_size: int | None = None,
-              mask: jax.Array | None = None, jit: bool = True) -> Any:
-    """Execute an aggregate on a single shard (PostgreSQL single-node mode)."""
+# Prepared-statement program cache for the local engine: the jitted pass
+# is memoized per aggregate INSTANCE (and block size), so re-executing a
+# retained statement — a prepared statement, a driver re-running its
+# pass, a bench rep — reuses the compiled program instead of re-tracing.
+# Bounded FIFO: evicting an entry drops its jit closure (and with it the
+# compiled executable), so one-shot aggregates don't accumulate; a live
+# entry pins its aggregate, so ids can't collide.
+_LOCAL_JIT_CACHE: dict[tuple, tuple[Aggregate, Callable]] = {}
+_LOCAL_JIT_MAX = 256
+
+
+def _local_jit(agg: Aggregate, block_size):
+    key = (id(agg), block_size)
+    hit = _LOCAL_JIT_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
 
     def go(columns, mask):
         return agg.final(_blocked_fold(agg, columns, mask, block_size))
 
-    fn = jax.jit(go) if jit else go
-    return fn(dict(table.columns), mask)
+    fn = jax.jit(go)
+    if len(_LOCAL_JIT_CACHE) >= _LOCAL_JIT_MAX:
+        _LOCAL_JIT_CACHE.pop(next(iter(_LOCAL_JIT_CACHE)))
+    _LOCAL_JIT_CACHE[key] = (agg, fn)
+    return fn
+
+
+def run_local(agg: Aggregate, table: Table, *, block_size: int | None = None,
+              mask: jax.Array | None = None, jit: bool = True) -> Any:
+    """Execute an aggregate on a single shard (PostgreSQL single-node
+    mode).  Compiled programs are reused across calls with the same
+    aggregate instance (see ``_LOCAL_JIT_CACHE``)."""
+    _record("scan", engine="local", rows=table.n_rows)
+    if not jit:
+        return agg.final(_blocked_fold(agg, dict(table.columns), mask,
+                                       block_size))
+    return _local_jit(agg, block_size)(dict(table.columns), mask)
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +351,7 @@ def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
     if mesh is None:
         return run_local(agg, table, block_size=block_size, mask=mask,
                          jit=jit)
+    _record("scan", engine="sharded", rows=table.n_rows)
 
     in_spec = jax.tree.map(
         lambda v: row_pspec(row_axes, v.ndim), dict(table.columns)
@@ -316,12 +377,40 @@ def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
 # Streaming / out-of-core execution.
 # ---------------------------------------------------------------------------
 
+# Same prepared-statement memo for the stream engine's per-block
+# programs (step / init-step / final), bounded like _LOCAL_JIT_CACHE.
+_STREAM_JIT_CACHE: dict[int, tuple] = {}
+_STREAM_JIT_MAX = 128
+
+
+def _stream_jit(agg: Aggregate):
+    hit = _STREAM_JIT_CACHE.get(id(agg))
+    if hit is not None:
+        return hit[1:]
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def step(state, block, mask):
+        return agg.transition(state, block, mask)
+
+    @jax.jit
+    def init_step(block, mask):
+        return agg.transition(agg.init(block), block, mask)
+
+    final = jax.jit(agg.final)
+    if len(_STREAM_JIT_CACHE) >= _STREAM_JIT_MAX:
+        _STREAM_JIT_CACHE.pop(next(iter(_STREAM_JIT_CACHE)))
+    _STREAM_JIT_CACHE[id(agg)] = (agg, step, init_step, final)
+    return step, init_step, final
+
+
 def run_stream(agg: Aggregate, blocks: Iterable[Columns]) -> Any:
     """Fold an aggregate over a host-side stream of row blocks.
 
     The device-resident state is donated between calls — the analogue of the
     paper's temp-table pattern: all large state stays "in the engine", the
-    host only schedules.
+    host only schedules.  Like :func:`run_local`, the per-block programs
+    are cached static on the aggregate instance, so re-streaming a
+    retained statement re-dispatches compiled steps instead of re-tracing.
     """
     it = iter(blocks)
     try:
@@ -329,23 +418,17 @@ def run_stream(agg: Aggregate, blocks: Iterable[Columns]) -> Any:
     except StopIteration:
         raise ValueError("run_stream: empty block stream — at least one "
                          "block is required to seed the fold state") from None
+    _record("scan", engine="stream")
     first = {k: jnp.asarray(v) for k, v in first.items()}
 
-    @partial(jax.jit, donate_argnums=(0,))
-    def step(state, block, mask):
-        return agg.transition(state, block, mask)
-
-    @jax.jit
-    def init_then_step(block, mask):
-        return agg.transition(agg.init(block), block, mask)
-
+    step, init_step, final = _stream_jit(agg)
     n0 = next(iter(first.values())).shape[0]
-    state = init_then_step(first, jnp.ones((n0,), jnp.bool_))
+    state = init_step(first, jnp.ones((n0,), jnp.bool_))
     for block in it:
         block = {k: jnp.asarray(v) for k, v in block.items()}
         n = next(iter(block.values())).shape[0]
         state = step(state, block, jnp.ones((n,), jnp.bool_))
-    return jax.jit(agg.final)(state)
+    return final(state)
 
 
 # ---------------------------------------------------------------------------
@@ -545,6 +628,8 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
         ops = None  # forced masked, local: ops never consulted
     if method == "auto":
         method = "segment" if ops is not None else "masked"
+    _record("scan", engine=f"grouped-{method}", sharded=mesh is not None,
+            groups=G)
 
     if method == "segment":
         if ops is None:

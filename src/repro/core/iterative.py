@@ -66,6 +66,7 @@ from .aggregates import (
 )
 from .compat import shard_map as _compat_shard_map
 from .table import Table, Columns
+from .trace import record as _record
 
 
 def relative_change(prev, new) -> jax.Array:
@@ -304,6 +305,7 @@ def fit(task: IterativeTask, table: Table, *, max_iters: int = 100,
 
     state0 = warm_start if warm_start is not None else task.init_state(columns)
     state0 = jax.tree.map(jnp.asarray, state0)
+    _record("fit", engine=engine, mode=mode)
 
     if mode == "host":
         return _fit_host(task, table, mask, state0, block_size, max_iters,
@@ -393,6 +395,7 @@ def fit_stream(task: IterativeTask,
         state0 = jax.tree.map(
             jnp.asarray,
             task.init_state({k: jnp.asarray(v) for k, v in first.items()}))
+    _record("fit", engine="stream")
     return _host_loop(task, _StreamRunner(blocks_factory), state0,
                       max_iters, tol)
 
@@ -464,6 +467,8 @@ def fit_grouped(task: IterativeTask, table: Table, key_col: str,
     if layout == "auto":
         layout = "segment" if _segment_task_ok(task, states0, cols) \
             else "masked"
+    _record("fit", engine=f"grouped-{layout}", sharded=mesh is not None,
+            groups=G)
     if layout == "segment":
         return _fit_grouped_segment(task, table, key_col, G, states0,
                                     max_iters, tol, block_size, mask, jit,

@@ -1,0 +1,200 @@
+"""Session — the declarative front-end over the logical-plan layer.
+
+The MADlib user experience is an analyst issuing statements and the
+database sharing work across them (§3.2).  A :class:`Session` batches
+statements as logical plan nodes, and :meth:`Session.run` plans and
+executes them together: independent one-pass statistics over the same
+table fold into ONE data pass, grouped statements share ONE partitioning
+sort, engines are picked cost-based, and :meth:`Session.explain` shows
+the physical plan before (or without) running it::
+
+    sess = Session()
+    stats = sess.profile(tbl)
+    ols   = sess.linregr(tbl)
+    freq  = sess.countmin_sketch(tbl, item_col="item")
+    print(sess.explain())         # one shared-scan pass, three statements
+    sess.run()
+    ols.result().coef
+
+Each statement returns a :class:`Handle`; ``handle.result()`` is
+available after ``run()``.  ``run()`` consumes the batch — subsequent
+statements start a new one.  Statements with *data dependencies* (e.g.
+quantiles' range pass feeding its histogram pass) cannot share a batch;
+issue them across two ``run()`` rounds or use the eager method wrappers,
+which plan each statement individually.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from .plan import (
+    GroupedScanAgg, IterativeFit, ScanAgg, StreamAgg, plan,
+)
+from .table import Table
+
+_UNSET = object()
+
+
+class Handle:
+    """Deferred result of one session statement."""
+
+    def __init__(self, label: str):
+        self.label = label
+        self._value: Any = _UNSET
+        self._failed = False
+
+    def done(self) -> bool:
+        return self._value is not _UNSET
+
+    def result(self) -> Any:
+        if self._value is _UNSET:
+            if self._failed:
+                raise RuntimeError(
+                    f"statement {self.label!r} was in a batch whose "
+                    "Session.run() raised — the batch was discarded; "
+                    "re-issue the statement")
+            raise RuntimeError(
+                f"statement {self.label!r} has not executed yet — call "
+                "Session.run() first")
+        return self._value
+
+
+class Session:
+    """Batches logical statements and runs them through the planner."""
+
+    def __init__(self):
+        self._nodes: list = []
+        self._posts: list = []
+        self._handles: list[Handle] = []
+        self._derived: list[tuple[Handle, list[Handle], Callable]] = []
+        self.last_plan = None
+
+    # -- generic statements ----------------------------------------------
+    def statement(self, node, *, post: Callable | None = None) -> Handle:
+        """Enqueue a prebuilt logical plan node; ``post`` (optional)
+        shapes the raw engine result into the handle's value."""
+        if node.label is None:
+            node.label = f"s{len(self._nodes)}"
+        h = Handle(node.label)
+        self._nodes.append(node)
+        self._posts.append(post)
+        self._handles.append(h)
+        return h
+
+    def scan(self, agg, table: Table, *, columns=None, mask=None,
+             block_size=None, engine: str = "auto", jit: bool = True,
+             label: str | None = None, post=None) -> Handle:
+        return self.statement(
+            ScanAgg(agg, table, columns=columns, mask=mask,
+                    block_size=block_size, engine=engine, jit=jit,
+                    label=label), post=post)
+
+    def grouped_scan(self, agg, table, group_col=None, num_groups=None, *,
+                     columns=None, mask=None, block_size=None,
+                     method: str = "auto", mesh=None, row_axes=None,
+                     jit: bool = True, label=None, post=None) -> Handle:
+        return self.statement(
+            GroupedScanAgg(agg, table, group_col, num_groups,
+                           columns=columns, mask=mask,
+                           block_size=block_size, method=method, mesh=mesh,
+                           row_axes=row_axes, jit=jit, label=label),
+            post=post)
+
+    def fit(self, task, table=None, *, label=None, post=None,
+            **kwargs) -> Handle:
+        return self.statement(IterativeFit(task, table, label=label,
+                                           **kwargs), post=post)
+
+    def stream_scan(self, agg, blocks, *, columns=None, label=None,
+                    post=None) -> Handle:
+        return self.statement(StreamAgg(agg, blocks, columns=columns,
+                                        label=label), post=post)
+
+    def _derive(self, parts: list[Handle], combine: Callable) -> Handle:
+        h = Handle(f"d{len(self._derived)}")
+        self._derived.append((h, parts, combine))
+        return h
+
+    # -- method sugar (lazy imports: methods build on core) ----------------
+    def profile(self, table: Table, *, distinct_counts: bool = False,
+                block_size=None, jit: bool = True) -> Handle:
+        """All of ``profile``'s statistics as individual statements —
+        their fusion into one scan falls out of the optimizer.  The
+        eager ``methods.profile.profile`` is a thin wrapper over this."""
+        from ..methods.profile import _shape_results, profile_aggregates
+        aggs = profile_aggregates(table, distinct_counts=distinct_counts)
+        parts = [self.scan(agg, table, block_size=block_size, jit=jit,
+                           label=f"profile:{name.strip('_')}")
+                 for name, agg in aggs.items()]
+        names = list(aggs)
+        return self._derive(
+            parts, lambda vals: _shape_results(dict(zip(names, vals))))
+
+    def linregr(self, table: Table, *, x_col: str = "x", y_col: str = "y",
+                block_size=None, use_kernel: bool | str = False) -> Handle:
+        from ..methods.linregr import LinregrAggregate
+        return self.scan(LinregrAggregate(use_kernel), table,
+                         columns={"x": x_col, "y": y_col},
+                         block_size=block_size, label="linregr")
+
+    def naive_bayes(self, table: Table, num_classes: int, *,
+                    x_col: str = "x", y_col: str = "y",
+                    block_size=None) -> Handle:
+        from ..methods.naive_bayes import NaiveBayesAggregate
+        return self.scan(NaiveBayesAggregate(num_classes), table,
+                         columns={"x": x_col, "y": y_col},
+                         block_size=block_size, label="naive_bayes")
+
+    def countmin_sketch(self, table: Table, *, depth: int = 4,
+                        width: int = 1024, item_col: str = "item",
+                        block_size=None) -> Handle:
+        from ..methods.sketches import CountMinAggregate
+        return self.scan(
+            CountMinAggregate(depth, width, item_col=item_col), table,
+            columns=(item_col,), block_size=block_size, label="countmin")
+
+    def fm_distinct_count(self, table: Table, *, num_hashes: int = 8,
+                          bits: int = 32, item_col: str = "item",
+                          block_size=None) -> Handle:
+        from ..methods.sketches import FMAggregate
+        return self.scan(FMAggregate(num_hashes, bits, item_col=item_col),
+                         table, columns=(item_col,), block_size=block_size,
+                         label="fm_distinct")
+
+    def logregr(self, table: Table, *, x_col: str = "x", y_col: str = "y",
+                max_iters: int = 30, tol: float = 1e-6, block_size=None
+                ) -> Handle:
+        from ..methods.logregr import IRLSTask, _result
+        t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
+                  table.row_axes)
+        return self.fit(IRLSTask(), t, max_iters=max_iters, tol=tol,
+                        block_size=block_size, label="logregr",
+                        post=_result)
+
+    # -- planning & execution ----------------------------------------------
+    def explain(self) -> str:
+        """Render the physical plan for the pending batch (no execution)."""
+        return plan(self._nodes).explain()
+
+    def run(self) -> list:
+        """Plan and execute the pending batch; resolves every handle and
+        returns the per-statement results in statement order.  The batch
+        is consumed whether or not execution succeeds — a failed batch is
+        discarded (its handles stay unresolved), it is never silently
+        re-planned alongside the next one."""
+        try:
+            pl = plan(self._nodes)
+            self.last_plan = pl
+            results = pl.execute()
+            for h, post, res in zip(self._handles, self._posts, results):
+                h._value = post(res) if post is not None else res
+            for h, parts, combine in self._derived:
+                h._value = combine([p.result() for p in parts])
+            return [h.result() for h in self._handles]
+        finally:
+            for h in self._handles + [d for d, _, _ in self._derived]:
+                if not h.done():
+                    h._failed = True
+            self._nodes, self._posts, self._handles = [], [], []
+            self._derived = []

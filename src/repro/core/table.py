@@ -46,6 +46,11 @@ class Table:
     columns: dict[str, jax.Array]
     mesh: Mesh | None = None
     row_axes: tuple[str, ...] = ()
+    # group_by memo: (key_col, num_groups) -> GroupedView.  Host-side state
+    # private to this instance — never flattened into the pytree, compared
+    # or hashed; derived tables (select/with_column/...) start empty.
+    _gb_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -145,10 +150,37 @@ class Table:
         (``run_grouped`` / ``fit_grouped``) then folds the partitioned
         layout in O(n) instead of re-masking the full table per group.
 
+        The view is **memoized** per ``(key_col, num_groups)`` on this
+        Table instance, so every grouped statement and every
+        ``fit_grouped`` over the same key shares ONE partitioning sort —
+        the plan layer's sort dedup rests on this cache.  A ``None``
+        group count also caches under its resolved value.  Derived
+        tables (``select`` / ``with_column`` / ...) are new instances
+        with empty caches; mutating ``columns`` in place requires an
+        explicit :meth:`invalidate`.
+
         Out-of-range ids (``< 0`` or ``>= num_groups``) keep their rows in
         the permuted table but outside every segment; grouped engines
         ignore them, matching the masked semantics of ``gid == g``.
         """
+        hit = self._gb_cache.get((key_col, num_groups))
+        if hit is not None:
+            return hit
+        view = self._group_by_uncached(key_col, num_groups)
+        self._gb_cache[(key_col, num_groups)] = view
+        self._gb_cache[(key_col, view.num_groups)] = view
+        return view
+
+    def invalidate(self) -> None:
+        """Drop every memoized :meth:`group_by` view.  Required only after
+        mutating ``columns`` in place — functional derivations already
+        return fresh instances with empty caches."""
+        self._gb_cache.clear()
+
+    def _group_by_uncached(self, key_col: str, num_groups: int | None
+                           ) -> "GroupedView":
+        from .trace import record
+        record("sort", key_col=key_col, n_rows=self.n_rows)
         gids = self.columns[key_col].astype(jnp.int32)
         if num_groups is None:
             num_groups = int(jax.device_get(jnp.max(gids))) + 1

@@ -1,0 +1,80 @@
+"""Host-side execution tracing — the plan layer's observability hooks.
+
+The scan-sharing optimizer's whole claim is "N statements, ONE data
+pass"; this module is how that claim is *checked* instead of asserted.
+Every execution engine records one event per physical data pass
+(``kind="scan"``), :meth:`Table.group_by` records one event per
+partitioning sort actually performed (``kind="sort"`` — cache hits are
+silent), and the iterative engines record one event per fit
+(``kind="fit"``).  ``tests/test_plan.py`` and ``benchmarks/bench_plan.py``
+wrap executions in :func:`trace_execution` and count.
+
+Events are recorded host-side at engine entry (never inside a traced
+function), so the counters see physical engine executions: a fused
+``run_many`` pass is ONE scan event regardless of how many member
+aggregates it folds, and a masked grouped pass is one event even though
+its cost is O(G·n) — the cost difference lives in ``explain()``, the
+event count in the trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Iterator
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str               # "scan" | "sort" | "fit"
+    engine: str | None      # "local" / "sharded" / "grouped-segment" / ...
+    detail: dict[str, Any]
+
+
+class Trace:
+    """An ordered list of engine events, with kind-filtered views."""
+
+    def __init__(self):
+        self.events: list[Event] = []
+
+    def _kind(self, kind: str) -> list[Event]:
+        return [e for e in self.events if e.kind == kind]
+
+    @property
+    def scans(self) -> list[Event]:
+        return self._kind("scan")
+
+    @property
+    def sorts(self) -> list[Event]:
+        return self._kind("sort")
+
+    @property
+    def fits(self) -> list[Event]:
+        return self._kind("fit")
+
+
+_ACTIVE: list[Trace] = []
+
+
+def record(kind: str, engine: str | None = None, **detail: Any) -> None:
+    """Record one event on every active trace (no-op when none are)."""
+    for t in _ACTIVE:
+        t.events.append(Event(kind, engine, detail))
+
+
+@contextlib.contextmanager
+def trace_execution() -> Iterator[Trace]:
+    """Collect engine events for the dynamic extent of the block::
+
+        with trace_execution() as t:
+            session.run()
+        assert len(t.scans) == 1
+
+    Nestable; every active trace sees every event.
+    """
+    t = Trace()
+    _ACTIVE.append(t)
+    try:
+        yield t
+    finally:
+        _ACTIVE.remove(t)

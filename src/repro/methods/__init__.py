@@ -7,11 +7,17 @@ Support:      sparse_vector, array_ops, conjugate gradient (core.convex)
 Text (§5.2):  crf (features, Viterbi, MCMC), string_match (q-grams)
 SGD models (§5.1 Table 2): sgd_models
 
-Execution conventions: ``profile`` fuses all of its statistics into ONE
-data pass via ``core.aggregates.FusedAggregate`` / ``run_many``; methods
-with a Pallas hot loop (linregr, sketches, kmeans) take ``use_kernel``
-(True = backend-aware auto dispatch through ``kernels.registry``,
-"pallas"/"ref" force an implementation).
+Execution conventions: method wrappers are DECLARATIVE — they emit
+logical plan nodes (``core.plan``: ``ScanAgg`` / ``GroupedScanAgg`` /
+``IterativeFit`` / ``StreamAgg``) and never call
+``run_local``/``run_sharded`` directly (CI greps for it); the planner
+picks engines cost-based, fuses compatible statements into shared scans
+(batch several via ``core.session.Session``) and dedups partitioning
+sorts.  ``profile`` is a thin planned batch whose single-pass execution
+falls out of the optimizer.  Methods with a Pallas hot loop (linregr,
+sketches, kmeans) take ``use_kernel`` (True = backend-aware auto
+dispatch through ``kernels.registry``, "pallas"/"ref" force an
+implementation).
 
 Iterative methods (logregr IRLS, kmeans Lloyd, lda EM, the convex
 solvers) register an ``IterativeTask`` and run under

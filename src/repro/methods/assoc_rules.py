@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.plan import ScanAgg, execute
 from ..core.table import Table
 
 
@@ -55,9 +56,8 @@ class AssocRules:
 
 def _count(table, candidates, block_size):
     agg = SupportAggregate(jnp.asarray(candidates, jnp.int32))
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+    return execute(ScanAgg(agg, table, block_size=block_size,
+                           label="assoc:support"))
 
 
 def apriori(table: Table, *, min_support: float = 0.1,

@@ -19,7 +19,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.plan import ScanAgg, execute
 from ..core.table import Table
 
 
@@ -149,9 +150,8 @@ def decision_tree_fit(table: Table, *, num_classes: int, max_depth: int = 4,
     hi = jnp.max(x, axis=0) + 1e-6
 
     def run(agg):
-        if table.mesh is not None:
-            return run_sharded(agg, table, block_size=block_size)
-        return run_local(agg, table, block_size=block_size)
+        return execute(ScanAgg(agg, table, block_size=block_size,
+                               label="dtree:split_stats"))
 
     for level in range(max_depth):
         stats = run(SplitStatsAggregate(model, level, lo, hi, n_bins,

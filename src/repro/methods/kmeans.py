@@ -35,8 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_many
-from ..core.iterative import IterativeTask, fit, fit_grouped
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.iterative import IterativeTask
+from ..core.plan import IterativeFit, execute
+from ..core.session import Session
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -303,10 +305,11 @@ class GumbelPickAggregate(Aggregate):
 
 def kmeans_pp_seed(table: Table, k: int, key: jax.Array,
                    x_col: str = "x") -> jax.Array:
-    """k-means++ seeding [5] in ONE fused scan per pick: ``run_many``
-    folds the D² normalizer (potential) and the Gumbel-max sampler over
-    the same pass, and the running D² column is refreshed against only
-    the newest center (instead of re-scanning all centers each round)."""
+    """k-means++ seeding [5] in ONE fused scan per pick: the D² normalizer
+    (potential) and the Gumbel-max sampler are two planned statements
+    over the same round table, and the scan-sharing optimizer fuses them
+    into one pass; the running D² column is refreshed against only the
+    newest center (instead of re-scanning all centers each round)."""
     x = table[x_col]
     n, d = x.shape
     key, sub = jax.random.split(key)
@@ -317,10 +320,13 @@ def kmeans_pp_seed(table: Table, k: int, key: jax.Array,
         key, sub = jax.random.split(key)
         t = Table({"x": x, "d2": d2, "__row__": rows}, table.mesh,
                   table.row_axes)
-        out = run_many({"z": SumD2Aggregate(),
-                        "pick": GumbelPickAggregate(sub, d)}, t)
+        sess = Session()
+        z = sess.scan(SumD2Aggregate(), t, label="kmeans++:potential")
+        pick = sess.scan(GumbelPickAggregate(sub, d), t,
+                         label="kmeans++:pick")
+        sess.run()
         # degenerate potential (all points on centers): fall back to row 0
-        newc = jnp.where(out["z"] > 0.0, out["pick"]["x"], x[0])
+        newc = jnp.where(z.result() > 0.0, pick.result()["x"], x[0])
         cents.append(newc)
         d2 = jnp.minimum(d2, jnp.sum((x - newc[None, :]) ** 2, -1))
     return jnp.stack(cents)
@@ -363,9 +369,10 @@ def kmeans_fit(table: Table, k: int, *, key: jax.Array | None = None,
         task = KMeansTask(cents, use_kernel)
     # moved/n is an integer multiple of 1/n, so +0.5/n makes "< tol"
     # exactly the paper's "moved <= reassign_frac_tol * n"
-    res = fit(task, t, max_iters=max_iters,
-              tol=reassign_frac_tol + 0.5 / n, block_size=block_size,
-              mode=mode)
+    res = execute(IterativeFit(task, t, max_iters=max_iters,
+                               tol=reassign_frac_tol + 0.5 / n,
+                               block_size=block_size, mode=mode,
+                               label="kmeans"))
     sse_trace = [float(v) for v in res.trace]
     return KMeansResult(res.state["cents"], sse_trace[-1], res.n_iters,
                         res.converged, sse_trace)
@@ -393,9 +400,11 @@ def kmeans_grouped(table: Table, key_col: str, k: int,
         warm = {"cents": init_centroids, "prev": init_centroids,
                 "it": jnp.zeros((init_centroids.shape[0],), jnp.int32)}
     n = t.n_rows
-    res = fit_grouped(task, t, key_col, num_groups, max_iters=max_iters,
-                      tol=reassign_frac_tol + 0.5 / n, warm_start=warm,
-                      mesh=mesh)
+    res = execute(IterativeFit(task, t, group_col=key_col,
+                               num_groups=num_groups, max_iters=max_iters,
+                               tol=reassign_frac_tol + 0.5 / n,
+                               warm_start=warm, mesh=mesh,
+                               label="kmeans_grouped"))
     sse = res.trace[np.arange(len(res.n_iters)), res.n_iters - 1] \
         if res.trace.size else res.trace
     return KMeansResult(res.state["cents"], sse, res.n_iters,

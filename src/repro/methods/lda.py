@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM
-from ..core.iterative import IterativeTask, fit
+from ..core.iterative import IterativeTask
+from ..core.plan import IterativeFit, execute
 from ..core.table import Table
 
 
@@ -109,6 +110,8 @@ def lda_fit(table: Table, n_topics: int, vocab: int, *,
     key = key if key is not None else jax.random.PRNGKey(0)
     beta = jax.random.dirichlet(key, jnp.full((vocab,), 1.0), (n_topics,))
     log_beta = jnp.log(jnp.maximum(beta, 1e-12))
-    res = fit(LDATask(log_beta, alpha, eta), table, max_iters=max_iters,
-              tol=tol, block_size=block_size, mode=mode)
+    res = execute(IterativeFit(LDATask(log_beta, alpha, eta), table,
+                               max_iters=max_iters, tol=tol,
+                               block_size=block_size, mode=mode,
+                               label="lda"))
     return jnp.exp(res.state["log_beta"]), [float(p) for p in res.trace]

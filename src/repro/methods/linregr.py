@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM
-from ..core.iterative import IterativeTask, fit, fit_grouped
+from ..core.iterative import IterativeTask
+from ..core.plan import GroupedScanAgg, ScanAgg, execute
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -127,12 +128,13 @@ class LinregrTask(IterativeTask):
 def linregr(table: Table, *, x_col: str = "x", y_col: str = "y",
             block_size: int | None = None, use_kernel: bool | str = False
             ) -> LinregrResult:
-    """``SELECT (linregr(y, x)).* FROM data`` — sharded when the table is."""
-    t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
-              table.row_axes)
-    res = fit(LinregrTask(use_kernel), t, max_iters=1, tol=None,
-              block_size=block_size)
-    return res.result
+    """``SELECT (linregr(y, x)).* FROM data`` — one ``ScanAgg`` statement;
+    the planner picks local vs sharded from the table's distribution, and
+    batching it with other one-pass statistics (via ``Session``) shares
+    the scan."""
+    return execute(ScanAgg(LinregrAggregate(use_kernel), table,
+                           columns={"x": x_col, "y": y_col},
+                           block_size=block_size, label="linregr"))
 
 
 def linregr_grouped(table: Table, key_col: str,
@@ -143,10 +145,9 @@ def linregr_grouped(table: Table, key_col: str,
     """``SELECT g, (linregr(y, x)).* FROM data GROUP BY g`` — one model per
     group in a shared scan; every result field has a leading group axis.
     ``mesh`` (defaulting to the table's) runs the scan on the sharded
-    grouped engine."""
-    t = Table({"x": table[x_col], "y": table[y_col],
-               key_col: table[key_col]}, table.mesh, table.row_axes)
-    res = fit_grouped(LinregrTask(use_kernel), t, key_col, num_groups,
-                      max_iters=1, tol=None, block_size=block_size,
-                      mesh=mesh)
-    return res.result
+    grouped engine; the partitioning sort is shared with every other
+    grouped statement over the same (table, key) via the group_by memo."""
+    return execute(GroupedScanAgg(
+        LinregrAggregate(use_kernel), table, key_col, num_groups,
+        columns={"x": x_col, "y": y_col}, block_size=block_size,
+        mesh=mesh, label="linregr_grouped"))

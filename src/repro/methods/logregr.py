@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM
 from ..core.convex import ConvexProgram, sgd as sgd_solver, parallel_sgd
-from ..core.iterative import IterativeTask, fit, fit_grouped, fit_stream
+from ..core.iterative import IterativeTask
+from ..core.plan import IterativeFit, execute
 from ..core.table import Table
 
 
@@ -123,8 +124,9 @@ def logregr(table: Table, *, x_col: str = "x", y_col: str = "y",
     t = Table({"x": table[x_col], "y": table[y_col]}, table.mesh,
               table.row_axes)
     ws = None if warm_start is None else {"beta": jnp.asarray(warm_start)}
-    res = fit(IRLSTask(), t, max_iters=max_iters, tol=tol,
-              block_size=block_size, mode=mode, warm_start=ws)
+    res = execute(IterativeFit(IRLSTask(), t, max_iters=max_iters, tol=tol,
+                               block_size=block_size, mode=mode,
+                               warm_start=ws, label="logregr"))
     return _result(res)
 
 
@@ -132,8 +134,9 @@ def logregr_stream(blocks_factory, *, max_iters: int = 30,
                    tol: float = 1e-6) -> LogregrResult:
     """Out-of-core IRLS: each iteration streams the blocks from a fresh
     ``blocks_factory()`` (dicts with "x"/"y") with device-resident state."""
-    res = fit_stream(IRLSTask(), blocks_factory, max_iters=max_iters,
-                     tol=tol)
+    res = execute(IterativeFit(IRLSTask(), blocks=blocks_factory,
+                               max_iters=max_iters, tol=tol,
+                               label="logregr_stream"))
     return _result(res)
 
 
@@ -150,9 +153,10 @@ def logregr_grouped(table: Table, key_col: str,
     whole frozen-group IRLS loop inside one ``shard_map`` program."""
     t = Table({"x": table[x_col], "y": table[y_col],
                key_col: table[key_col]}, table.mesh, table.row_axes)
-    res = fit_grouped(IRLSTask(), t, key_col, num_groups,
-                      max_iters=max_iters, tol=tol, block_size=block_size,
-                      mesh=mesh)
+    res = execute(IterativeFit(IRLSTask(), t, group_col=key_col,
+                               num_groups=num_groups, max_iters=max_iters,
+                               tol=tol, block_size=block_size, mesh=mesh,
+                               label="logregr_grouped"))
     return _result(res)
 
 

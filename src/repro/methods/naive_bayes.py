@@ -13,9 +13,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import (
-    Aggregate, MERGE_SUM, run_grouped, run_local, run_sharded,
-)
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.plan import GroupedScanAgg, ScanAgg, execute
 from ..core.table import Table
 
 
@@ -72,9 +71,8 @@ class NaiveBayesAggregate(Aggregate):
 def naive_bayes_fit(table: Table, num_classes: int, *,
                     block_size: int | None = None) -> NaiveBayesModel:
     agg = NaiveBayesAggregate(num_classes)
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+    return execute(ScanAgg(agg, table, columns=("x", "y"),
+                           block_size=block_size, label="naive_bayes"))
 
 
 def naive_bayes_grouped(table: Table, key_col: str, num_classes: int,
@@ -85,11 +83,10 @@ def naive_bayes_grouped(table: Table, key_col: str, num_classes: int,
     per group through the partitioned grouped-scan core; every model field
     carries a leading group axis.  ``mesh`` (defaulting to the table's)
     engages the sharded grouped engine."""
-    t = Table({"x": table["x"], "y": table["y"], key_col: table[key_col]},
-              table.mesh, table.row_axes)
-    return run_grouped(NaiveBayesAggregate(num_classes), t, key_col,
-                       num_groups, block_size=block_size, method=method,
-                       mesh=mesh)
+    return execute(GroupedScanAgg(
+        NaiveBayesAggregate(num_classes), table, key_col, num_groups,
+        columns=("x", "y"), block_size=block_size, method=method,
+        mesh=mesh, label="naive_bayes_grouped"))
 
 
 @jax.jit

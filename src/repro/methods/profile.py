@@ -2,13 +2,14 @@
 row per column of an arbitrary table, and its whole point is doing so in a
 SINGLE table scan.
 
-We reproduce that shared-scan execution with :class:`FusedAggregate`: the
-templated ProfileAggregate (all per-column univariate stats) and one FM
-distinct-count sketch per eligible integer column are packed into one
-state pytree and folded in exactly one data pass — local or sharded,
-chosen from the table's distribution.  ``benchmarks/bench_profile.py``
-measures the pass-count and wall-time win over the sequential
-one-aggregate-per-scan baseline.
+Since the logical-plan layer, ``profile`` is a thin planned batch: it
+emits one ``ScanAgg`` statement per constituent (the templated
+ProfileAggregate plus one FM distinct-count sketch per eligible integer
+column) into a :class:`~repro.core.session.Session`, and the shared-scan
+optimizer fuses them into exactly one data pass — the PR-1 hand-built
+``FusedAggregate`` wiring now falls out of the planner.
+``benchmarks/bench_plan.py`` measures the pass-count and wall-time win of
+planned batches over the sequential one-statement-per-scan baseline.
 """
 
 from __future__ import annotations
@@ -17,8 +18,8 @@ import itertools
 
 import jax.numpy as jnp
 
-from ..core.aggregates import FusedAggregate, run_local, run_sharded, \
-    run_stream
+from ..core.plan import StreamAgg, execute
+from ..core.session import Session
 from ..core.table import Table
 from ..core.templates import ProfileAggregate
 from .sketches import FMAggregate
@@ -36,7 +37,8 @@ def distinct_count_columns(table: Table) -> tuple[str, ...]:
 
 def profile_aggregates(table: Table, *, distinct_counts: bool = False
                        ) -> dict:
-    """The aggregate set a profile run fuses into one scan."""
+    """The aggregate set a profile run plans as one batch (the optimizer
+    fuses them into one scan)."""
     aggs = {_STATS: ProfileAggregate()}
     if distinct_counts:
         for name in distinct_count_columns(table):
@@ -55,32 +57,37 @@ def _shape_results(results: dict) -> dict:
 def profile(table: Table, *, distinct_counts: bool = False,
             block_size: int | None = None, jit: bool = True) -> dict:
     """Univariate stats for every numeric column (+ approximate distinct
-    counts for integer columns when requested) — ONE data pass total."""
-    fused = FusedAggregate(profile_aggregates(
-        table, distinct_counts=distinct_counts))
-    if table.mesh is not None:
-        results = run_sharded(fused, table, block_size=block_size, jit=jit)
-    else:
-        results = run_local(fused, table, block_size=block_size, jit=jit)
-    return _shape_results(results)
+    counts for integer columns when requested) — ONE data pass total,
+    by way of the scan-sharing planner (``Session.profile`` is the one
+    place the batch is built)."""
+    sess = Session()
+    handle = sess.profile(table, distinct_counts=distinct_counts,
+                          block_size=block_size, jit=jit)
+    sess.run()
+    return handle.result()
 
 
 def profile_stream(blocks, *, distinct_counts: bool = False) -> dict:
     """Streaming fused profile — the out-of-core workload (ROADMAP item).
 
     ``blocks`` is a host-side iterable of column dicts (e.g. one per file
-    of an out-of-core table).  The whole fused aggregate set — stats AND
-    the FM/CM sketch states — lives in ONE device-resident pytree that is
-    donated between chunks, so no chunk is ever re-read and the host only
-    schedules.  Same numbers as :func:`profile` on the concatenated
-    table, still exactly one pass over the data.
+    of an out-of-core table).  Each constituent becomes a ``StreamAgg``
+    statement over the SAME block iterator; the planner must (and does)
+    fuse same-source stream statements into one ``run_stream`` fold, so
+    the whole aggregate set — stats AND the FM sketch states — lives in
+    ONE device-resident pytree donated between chunks.  Same numbers as
+    :func:`profile` on the concatenated table, still exactly one pass.
     """
     it = iter(blocks)
     try:
         first = {k: jnp.asarray(v) for k, v in next(it).items()}
     except StopIteration:
         raise ValueError("profile_stream: empty block stream") from None
-    fused = FusedAggregate(profile_aggregates(
-        Table.from_columns(first), distinct_counts=distinct_counts))
-    results = run_stream(fused, itertools.chain([first], it))
-    return _shape_results(results)
+    aggs = profile_aggregates(Table.from_columns(first),
+                              distinct_counts=distinct_counts)
+    source = itertools.chain([first], it)
+    sess = Session()
+    handles = {name: sess.statement(StreamAgg(agg, source, label=name))
+               for name, agg in aggs.items()}
+    sess.run()
+    return _shape_results({name: h.result() for name, h in handles.items()})

@@ -12,9 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import (
-    Aggregate, MERGE_SUM, run_grouped, run_local, run_sharded,
-)
+from ..core.aggregates import Aggregate, MERGE_SUM
+from ..core.plan import GroupedScanAgg, ScanAgg, execute
 from ..core.templates import ProfileAggregate
 from ..core.table import Table
 
@@ -73,13 +72,16 @@ def _interp_quantiles(hist, lo, hi, qs, bins):
 
 def quantiles(table: Table, qs, *, value_col: str = "v", bins: int = 4096,
               block_size: int | None = None) -> jax.Array:
-    """Approximate quantiles with error ≤ range/bins."""
-    t = Table({value_col: table[value_col]}, table.mesh, table.row_axes)
-    run = (lambda a: run_sharded(a, t, block_size=block_size)
-           if t.mesh is not None else run_local(a, t, block_size=block_size))
-    prof = run(ProfileAggregate())[value_col]
+    """Approximate quantiles with error ≤ range/bins.  Two planned
+    statements with a data dependency (the profile pass fixes the
+    histogram's range), so they execute as two sequential plans."""
+    prof = execute(ScanAgg(ProfileAggregate(), table,
+                           columns=(value_col,), block_size=block_size,
+                           label="quantiles:range"))[value_col]
     lo, hi = float(prof["min"]), float(prof["max"])
-    hist = run(HistogramAggregate(lo, hi, bins, value_col))
+    hist = execute(ScanAgg(HistogramAggregate(lo, hi, bins, value_col),
+                           table, block_size=block_size,
+                           label="quantiles:hist"))
     qs = jnp.asarray(qs, jnp.float32)
     return _interp_quantiles(hist, lo, hi, qs, bins)
 
@@ -94,18 +96,23 @@ def quantiles_grouped(table: Table, key_col: str, qs, *,
     its own group's range.  Returns ``(num_groups, len(qs))``; groups with
     no rows yield non-finite values (their range is empty).  Both passes
     run on the sharded grouped engine when ``mesh`` (defaulting to the
-    table's) is set, still sharing one partitioning sort."""
+    table's) is set.
+
+    The two grouped statements share ONE partitioning sort through the
+    ``Table.group_by`` memo — no hand-threaded ``GroupedView``; the group
+    id rides along as a data column for the histogram's range lookup."""
     gcol = table[key_col]
-    # one partitioning sort, shared by both grouped passes; the group id
-    # rides along as a data column for the histogram's range lookup
     t = Table({value_col: table[value_col], "__g__": gcol, key_col: gcol},
               table.mesh, table.row_axes)
-    view = t.group_by(key_col, num_groups)
-    prof = run_grouped(ProfileAggregate(), view.select(value_col),
-                       block_size=block_size, mesh=mesh)[value_col]
+    prof = execute(GroupedScanAgg(
+        ProfileAggregate(), t, key_col, num_groups,
+        columns=(value_col,), block_size=block_size, mesh=mesh,
+        label="quantiles_grouped:range"))[value_col]
     lo, hi = prof["min"], prof["max"]
-    hist = run_grouped(GroupedHistogramAggregate(lo, hi, bins, value_col),
-                       view, block_size=block_size, mesh=mesh)
+    hist = execute(GroupedScanAgg(
+        GroupedHistogramAggregate(lo, hi, bins, value_col), t, key_col,
+        num_groups, block_size=block_size, mesh=mesh,
+        label="quantiles_grouped:hist"))
     qs = jnp.asarray(qs, jnp.float32)
     return jax.vmap(
         lambda h, l, u: _interp_quantiles(h, l, u, qs, bins))(hist, lo, hi)

@@ -18,8 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_MAX, MERGE_SUM, \
-    run_grouped, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_MAX, MERGE_SUM
+from ..core.plan import GroupedScanAgg, ScanAgg, execute
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -133,18 +133,16 @@ def countmin_sketch(table: Table, *, depth: int = 4, width: int = 1024,
                     item_col: str = "item",
                     block_size: int | None = None) -> jax.Array:
     agg = CountMinAggregate(depth, width, item_col=item_col)
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+    return execute(ScanAgg(agg, table, block_size=block_size,
+                           label="countmin"))
 
 
 def fm_distinct_count(table: Table, *, num_hashes: int = 8, bits: int = 32,
                       item_col: str = "item",
                       block_size: int | None = None) -> jax.Array:
     agg = FMAggregate(num_hashes, bits, item_col=item_col)
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+    return execute(ScanAgg(agg, table, block_size=block_size,
+                           label="fm_distinct"))
 
 
 def countmin_sketch_grouped(table: Table, key_col: str,
@@ -157,12 +155,14 @@ def countmin_sketch_grouped(table: Table, key_col: str,
     a ``(num_groups, depth, width)`` counter stack from one partitioned
     grouped scan.  Counters are integers, so the grouped result is
     bit-identical to sketching each group's rows alone — on the sharded
-    grouped engine (``mesh``, defaulting to the table's) too."""
-    t = Table({item_col: table[item_col], key_col: table[key_col]},
-              table.mesh, table.row_axes)
-    return run_grouped(CountMinAggregate(depth, width, item_col=item_col),
-                       t, key_col, num_groups, block_size=block_size,
-                       mesh=mesh)
+    grouped engine (``mesh``, defaulting to the table's) too.  Emitted as
+    a ``GroupedScanAgg`` over the ORIGINAL table with an ``item_col``
+    projection, so batched grouped statements share one partitioning
+    sort through the ``group_by`` memo."""
+    return execute(GroupedScanAgg(
+        CountMinAggregate(depth, width, item_col=item_col), table, key_col,
+        num_groups, columns=(item_col,), block_size=block_size, mesh=mesh,
+        label="countmin_grouped"))
 
 
 def fm_distinct_count_grouped(table: Table, key_col: str,
@@ -175,8 +175,7 @@ def fm_distinct_count_grouped(table: Table, key_col: str,
     (``SELECT g, count(DISTINCT item) GROUP BY g``, approximated): the
     max-merge bitmaps segment-fold in one grouped scan (sharded across
     ``mesh`` when given); returns a ``(num_groups,)`` estimate vector."""
-    t = Table({item_col: table[item_col], key_col: table[key_col]},
-              table.mesh, table.row_axes)
-    return run_grouped(FMAggregate(num_hashes, bits, item_col=item_col),
-                       t, key_col, num_groups, block_size=block_size,
-                       mesh=mesh)
+    return execute(GroupedScanAgg(
+        FMAggregate(num_hashes, bits, item_col=item_col), table, key_col,
+        num_groups, columns=(item_col,), block_size=block_size, mesh=mesh,
+        label="fm_grouped"))

@@ -18,8 +18,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregates import Aggregate, MERGE_SUM, run_local, run_sharded
+from ..core.aggregates import Aggregate, MERGE_SUM
 from ..core.convex import ConvexProgram, sgd as sgd_solver
+from ..core.plan import ScanAgg, execute
 from ..core.table import Table
 
 
@@ -41,9 +42,8 @@ class AtAQAggregate(Aggregate):
 
 
 def _run(agg, table, block_size):
-    if table.mesh is not None:
-        return run_sharded(agg, table, block_size=block_size)
-    return run_local(agg, table, block_size=block_size)
+    return execute(ScanAgg(agg, table, block_size=block_size,
+                           label="svd:AtAQ"))
 
 
 def svd_power(table: Table, k: int, *, n_iters: int = 20,

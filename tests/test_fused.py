@@ -133,19 +133,11 @@ def test_run_many_mask_on_sharded_table(table, mesh1):
 
 # -- the profile() acceptance criterion ---------------------------------------
 
-class _CountingFused(FusedAggregate):
-    """Counts top-level transition invocations (= data passes executed)."""
-
-    passes = 0
-
-    def transition(self, state, block, mask):
-        _CountingFused.passes += 1
-        return super().transition(state, block, mask)
-
-
-def test_profile_distinct_counts_single_pass(key, monkeypatch):
-    """profile(distinct_counts=True) = ONE fused scan, same numbers as the
+def test_profile_distinct_counts_single_pass(key):
+    """profile(distinct_counts=True) = ONE fused scan (trace-verified:
+    the planner fuses the per-statement ScanAggs), same numbers as the
     sequential scan-per-aggregate baseline."""
+    from repro.core import trace_execution
     from repro.methods import profile as profile_mod
     from repro.methods.sketches import fm_distinct_count
 
@@ -156,11 +148,10 @@ def test_profile_distinct_counts_single_pass(key, monkeypatch):
     }
     tbl = Table.from_columns(cols)
 
-    monkeypatch.setattr(profile_mod, "FusedAggregate", _CountingFused)
-    _CountingFused.passes = 0
-    out = profile_mod.profile(tbl, distinct_counts=True)
-    assert _CountingFused.passes == 1, (
-        f"profile executed {_CountingFused.passes} data passes, wanted 1")
+    with trace_execution() as t:
+        out = profile_mod.profile(tbl, distinct_counts=True)
+    assert len(t.scans) == 1, (
+        f"profile executed {len(t.scans)} data passes, wanted 1")
 
     # sequential oracle: separate scans, pre-refactor dataflow
     stats = run_local(ProfileAggregate(), tbl)

@@ -1,0 +1,321 @@
+"""Logical-plan layer: scan sharing, sort dedup, cost-based engine
+selection, loud mixed-mask rejection, golden EXPLAIN plans, and planned
+vs per-statement-direct parity (bit-identical for exact-state
+aggregates).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ENGINE_CAPS, GroupedScanAgg, ProfileAggregate, ScanAgg, Session,
+    StreamAgg, Table, execute, plan, run_grouped, run_local,
+    trace_execution,
+)
+from repro.core.plan import (
+    fused_scan_pass, select_grouped_method, select_scan_engine,
+)
+from repro.methods.linregr import LinregrAggregate
+from repro.methods.quantiles import HistogramAggregate
+from repro.methods.sketches import CountMinAggregate, FMAggregate
+
+N, GROUPS = 512, 4
+
+
+@pytest.fixture(scope="module")
+def table(key):
+    kx, ky, ki = jax.random.split(key, 3)
+    return Table.from_columns({
+        "x": jax.random.normal(kx, (N, 3)),
+        "y": jax.random.normal(ky, (N,)),
+        "item": jax.random.randint(ki, (N,), 0, 100),
+        "g": (jnp.arange(N) % GROUPS).astype(jnp.int32),
+    })
+
+
+def _cm():
+    return CountMinAggregate(depth=4, width=256, item_col="item")
+
+
+def _fm():
+    return FMAggregate(num_hashes=4, bits=16, item_col="item")
+
+
+def _hist():
+    return HistogramAggregate(-4.0, 4.0, bins=64, value_col="y")
+
+
+# -- capability matrix & cost model -------------------------------------------
+
+def test_capability_matrix_shape():
+    assert set(ENGINE_CAPS) == {
+        "local", "sharded", "stream", "grouped-segment", "grouped-masked",
+        "sharded-grouped"}
+    for caps in ENGINE_CAPS.values():
+        assert set(caps) == {"mask", "group_by", "fit", "stream"}
+    assert not ENGINE_CAPS["stream"]["mask"]
+    assert ENGINE_CAPS["sharded-grouped"]["group_by"]
+
+
+class _FakeMesh:
+    def __init__(self, segs):
+        self.shape = {"data": segs}
+
+
+def test_select_scan_engine_cost_based():
+    eng, costs = select_scan_engine(100_000, mesh=None)
+    assert eng == "local" and set(costs) == {"local"}
+    # >1 segment: the two-phase sharded plan is strictly cheaper
+    eng, costs = select_scan_engine(100_000, mesh=_FakeMesh(4))
+    assert eng == "sharded"
+    assert costs["sharded"] < costs["local"]
+    # degenerate 1-segment mesh: tie breaks to the local fold
+    eng, _ = select_scan_engine(100_000, mesh=_FakeMesh(1))
+    assert eng == "local"
+    # forced engine is honored, not re-derived
+    eng, _ = select_scan_engine(100_000, mesh=_FakeMesh(4), forced="local")
+    assert eng == "local"
+
+
+def test_select_grouped_method_cost_based():
+    m, costs = select_grouped_method(100_000, 64, segment_ok=True)
+    assert m == "segment" and costs["segment"] < costs["masked"]
+    m, costs = select_grouped_method(100_000, 64, segment_ok=False)
+    assert m == "masked" and "segment" not in costs
+    with pytest.raises(ValueError, match="segment"):
+        select_grouped_method(100_000, 64, segment_ok=False,
+                              forced="segment")
+
+
+# -- scan sharing across statements -------------------------------------------
+
+def test_batch_three_statements_one_pass(table):
+    """The acceptance criterion: >=3 independent one-pass statements over
+    one table -> exactly ONE data pass, bit-identical to per-statement
+    direct engine calls on exact-state aggregates."""
+    sess = Session()
+    h_cm = sess.scan(_cm(), table)
+    h_fm = sess.scan(_fm(), table)
+    h_hist = sess.scan(_hist(), table)
+    with trace_execution() as t:
+        sess.run()
+    assert len(t.scans) == 1, [e.engine for e in t.scans]
+
+    # per-statement direct engine execution (the pre-plan dataflow)
+    solo_cm = run_local(_cm(), table)
+    solo_fm = run_local(_fm(), table)
+    solo_hist = run_local(_hist(), table)
+    # integer sketch counters / bitmap states and histogram counts are
+    # exact: planned fusion must be BIT-identical, not just close
+    assert np.array_equal(np.asarray(h_cm.result()), np.asarray(solo_cm))
+    assert float(h_fm.result()) == float(solo_fm)
+    assert np.array_equal(np.asarray(h_hist.result()),
+                          np.asarray(solo_hist))
+
+
+def test_planned_profile_and_linregr_share_scan(table):
+    sess = Session()
+    h_prof = sess.profile(table.select("x", "y"))
+    h_ols = sess.linregr(table)
+    with trace_execution() as t:
+        sess.run()
+    # profile scans its own (projected) table; linregr scans `table` —
+    # two tables, two passes, but profile's members still fuse
+    assert len(t.scans) == 2
+    prof = h_prof.result()
+    solo = run_local(ProfileAggregate(), table.select("x", "y"))
+    np.testing.assert_allclose(np.asarray(prof["y"]["mean"]),
+                               np.asarray(solo["y"]["mean"]), rtol=1e-6)
+    res = h_ols.result()
+    from repro.methods.linregr import linregr
+    solo_ols = linregr(table)
+    np.testing.assert_allclose(np.asarray(res.coef),
+                               np.asarray(solo_ols.coef), rtol=1e-6)
+
+
+def test_projection_isolates_templated_members(table):
+    """A fused ProfileAggregate member must profile exactly ITS
+    statement's columns even when the fused block carries more."""
+    sess = Session()
+    h_prof = sess.scan(ProfileAggregate(), table, columns=("y",))
+    h_cm = sess.scan(_cm(), table)
+    with trace_execution() as t:
+        sess.run()
+    assert len(t.scans) == 1
+    assert set(h_prof.result()) == {"y"}
+
+
+# -- the mixed-mask correctness trap ------------------------------------------
+
+def test_mixed_masks_plan_as_separate_passes(table):
+    m1 = np.arange(N) % 2 == 0
+    m2 = np.arange(N) % 3 == 0
+    sess = Session()
+    h1 = sess.scan(_hist(), table, mask=m1)
+    h2 = sess.scan(_hist(), table, mask=m2)
+    h3 = sess.scan(_hist(), table)  # no mask: its own pass too
+    pl = plan(sess._nodes)
+    assert len(pl.passes) == 3
+    sess.run()
+    for h, m in ((h1, m1), (h2, m2), (h3, None)):
+        solo = run_local(_hist(), table, mask=None if m is None
+                         else jnp.asarray(m))
+        assert np.array_equal(np.asarray(h.result()), np.asarray(solo))
+
+
+def test_mixed_mask_fusion_rejected_loudly(table):
+    m1 = jnp.asarray(np.arange(N) % 2 == 0)
+    m2 = jnp.asarray(np.arange(N) % 3 == 0)
+    members = [(0, ScanAgg(_hist(), table, mask=m1)),
+               (1, ScanAgg(_hist(), table, mask=m2))]
+    with pytest.raises(ValueError, match="mixed-mask"):
+        fused_scan_pass(members)
+
+
+def test_cross_table_and_block_size_fusion_rejected(table, key):
+    other = Table.from_columns({"y": jax.random.normal(key, (N,))})
+    with pytest.raises(ValueError, match="different tables"):
+        fused_scan_pass([(0, ScanAgg(_hist(), table)),
+                         (1, ScanAgg(_hist(), other))])
+    with pytest.raises(ValueError, match="block_size"):
+        fused_scan_pass([(0, ScanAgg(_hist(), table, block_size=64)),
+                         (1, ScanAgg(_hist(), table, block_size=128))])
+
+
+# -- sort dedup ---------------------------------------------------------------
+
+def test_grouped_statements_share_one_sort_and_scan(table):
+    sess = Session()
+    h_cm = sess.grouped_scan(_cm(), table, "g", columns=("item",))
+    h_fm = sess.grouped_scan(_fm(), table, "g", columns=("item",))
+    h_lr = sess.grouped_scan(LinregrAggregate(), table, "g",
+                             columns=("x", "y"))
+    with trace_execution() as t:
+        sess.run()
+    assert len(t.sorts) == 1, "N grouped statements must share ONE sort"
+    assert len(t.scans) == 1, "compatible grouped statements must fuse"
+    solo_cm = run_grouped(_cm(), table.select("item", "g"), "g", GROUPS)
+    assert np.array_equal(np.asarray(h_cm.result()), np.asarray(solo_cm))
+    solo_lr = run_grouped(LinregrAggregate(),
+                          table.select("x", "y", "g"), "g", GROUPS)
+    np.testing.assert_allclose(np.asarray(h_lr.result().coef),
+                               np.asarray(solo_lr.coef),
+                               rtol=1e-5, atol=1e-5)
+    assert h_fm.result().shape == (GROUPS,)
+
+
+def test_group_by_memo_across_plans_and_invalidate(table):
+    tbl = Table.from_columns({k: v for k, v in table.columns.items()})
+    with trace_execution() as t:
+        execute(GroupedScanAgg(_cm(), tbl, "g", columns=("item",)))
+        execute(GroupedScanAgg(_fm(), tbl, "g", columns=("item",)))
+    assert len(t.sorts) == 1, "the group_by memo spans separate plans"
+    assert tbl.group_by("g") is tbl.group_by("g", GROUPS)
+    tbl.invalidate()
+    with trace_execution() as t:
+        tbl.group_by("g")
+    assert len(t.sorts) == 1, "invalidate() must drop the memo"
+
+
+def test_quantiles_grouped_single_sort(table):
+    from repro.methods.quantiles import quantiles_grouped
+    with trace_execution() as t:
+        out = quantiles_grouped(table.select("y", "g").with_column(
+            "v", table["y"]), "g", [0.25, 0.5, 0.75], bins=128)
+    assert len(t.sorts) == 1
+    assert len(t.scans) == 2  # range pass + histogram pass
+    assert out.shape == (GROUPS, 3)
+
+
+# -- stream fusion ------------------------------------------------------------
+
+def test_stream_statements_fuse_over_shared_source(table):
+    blocks = iter([{"item": np.arange(100) % 30},
+                   {"item": np.arange(100) % 60}])
+    sess = Session()
+    h_cm = sess.stream_scan(_cm(), blocks)
+    h_fm = sess.stream_scan(_fm(), blocks)
+    with trace_execution() as t:
+        sess.run()
+    # mandatory fusion: the shared iterator is consumed exactly once
+    assert len(t.scans) == 1
+    solo_tbl = Table.from_columns({"item": np.concatenate(
+        [np.arange(100) % 30, np.arange(100) % 60])})
+    assert np.array_equal(np.asarray(h_cm.result()),
+                          np.asarray(run_local(_cm(), solo_tbl)))
+    assert float(h_fm.result()) == float(run_local(_fm(), solo_tbl))
+
+
+# -- fits through the plan layer ----------------------------------------------
+
+def test_session_fit_matches_eager(two_tables=None):
+    from repro.core import synthetic_classification_table
+    from repro.methods.logregr import logregr
+    tbl, _ = synthetic_classification_table(jax.random.PRNGKey(3), 2000, 4)
+    sess = Session()
+    h = sess.logregr(tbl, max_iters=8)
+    with trace_execution() as t:
+        sess.run()
+    assert len(t.fits) == 1 and t.fits[0].engine == "local"
+    eager = logregr(tbl, max_iters=8)
+    np.testing.assert_allclose(np.asarray(h.result().coef),
+                               np.asarray(eager.coef), rtol=1e-6)
+    assert h.result().n_iters == eager.n_iters
+
+
+def test_handle_before_run_raises(table):
+    sess = Session()
+    h = sess.scan(_cm(), table)
+    with pytest.raises(RuntimeError, match="has not executed"):
+        h.result()
+
+
+# -- golden EXPLAIN plans -----------------------------------------------------
+
+def test_explain_golden_fused_batch(table):
+    sess = Session()
+    sess.scan(_cm(), table)
+    sess.scan(_fm(), table)
+    sess.scan(_hist(), table)
+    sess.grouped_scan(_cm(), table, "g", num_groups=GROUPS,
+                      columns=("item",))
+    sess.grouped_scan(_fm(), table, "g", num_groups=GROUPS,
+                      columns=("item",))
+    assert sess.explain() == (
+        "plan: 5 statements -> 2 passes, 1 sort\n"
+        "  pass 0: shared-scan [local] t0 rows=512 cost=512\n"
+        "    s0: CountMinAggregate\n"
+        "    s1: FMAggregate\n"
+        "    s2: HistogramAggregate\n"
+        "  pass 1: grouped-scan [grouped-segment] t0 by g groups=4 "
+        "sort=v0 rows=512 cost=1024 (rejected: masked=2048)\n"
+        "    s3: CountMinAggregate\n"
+        "    s4: FMAggregate"
+    )
+
+
+def test_explain_golden_masked_and_fit(table, key):
+    mask = jnp.asarray(np.arange(N) % 2 == 0)
+    from repro.methods.logregr import IRLSTask
+    from repro.core import IterativeFit
+    sess = Session()
+    sess.scan(_hist(), table, mask=mask, block_size=128)
+    sess.grouped_scan(_cm(), table, "g", num_groups=GROUPS,
+                      columns=("item",), method="masked")
+    sess.statement(IterativeFit(
+        IRLSTask(), table.select("x", "y"), max_iters=5, tol=1e-4,
+        label="irls"))
+    assert sess.explain() == (
+        "plan: 3 statements -> 3 passes, 1 sort\n"
+        "  pass 0: shared-scan [local] t0 rows=512 mask=yes block=128 "
+        "cost=512\n"
+        "    s0: HistogramAggregate\n"
+        "  pass 1: grouped-scan [grouped-masked] t0 by g groups=4 "
+        "sort=v0 rows=512 cost=2048 (rejected: segment=1024)\n"
+        "    s1: CountMinAggregate\n"
+        "  pass 2: fit [local] t1 rows=512 max_iters=5 tol=0.0001 "
+        "cost=2560\n"
+        "    irls: IRLSTask"
+    )
