@@ -9,6 +9,8 @@
 #                        (pass count + wall time) vs scan-per-aggregate
 #   bench_plan        — §3.2 declarative batches: planned (scan-sharing
 #                        optimizer) vs naive per-statement execution
+#   bench_ivm         — §4.1 merge combinators as incremental view
+#                        maintenance: delta-fold refresh vs full rescan
 #   bench_sgd_models  — Table 2 (six models, one SGD abstraction)
 #   bench_text        — Table 3 (feature extraction, Viterbi, MCMC,
 #                        q-gram matching)
@@ -22,14 +24,15 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_linregr, bench_iterative, bench_plan, \
-        bench_profile, bench_sgd_models, bench_text, roofline
+    from . import bench_ivm, bench_linregr, bench_iterative, \
+        bench_plan, bench_profile, bench_sgd_models, bench_text, roofline
 
     suites = [
         ("bench_linregr", bench_linregr.run),
         ("bench_iterative", bench_iterative.run),
         ("bench_profile", bench_profile.run),
         ("bench_plan", bench_plan.run),
+        ("bench_ivm", bench_ivm.run),
         ("bench_sgd_models", bench_sgd_models.run),
         ("bench_text", bench_text.run),
         ("roofline", roofline.run),

@@ -7,7 +7,12 @@ fuses compatible statements into shared scans, dedups partitioning sorts
 through the memoized ``Table.group_by``, and picks engines cost-based
 from the capability matrix (``ENGINE_CAPS``, below) — ``explain()``
 renders the chosen physical plan like ``EXPLAIN``.  :class:`Session`
-is the analyst front-end: batch statements, explain, run.
+is the analyst front-end: batch statements, explain, run.  Retained
+statements become *living views* (:func:`materialize` /
+``Session.materialize``): a :class:`MaterializedHandle` pins the table
+version and fold state, and appends (``Table.append``) refresh by
+delta-folding only the new rows with the aggregates' own merge
+combinators — bit-identical to a rescan for exact-state aggregates.
 
 - Table          — sharded pytree-of-columns (macro-programming substrate)
 - Aggregate      — the (init, transition, merge, final) UDA pattern
@@ -153,6 +158,7 @@ from .plan import (
     explain,
     plan,
 )
+from .materialize import MaterializedHandle, materialize
 from .session import Handle, Session
 from .trace import Trace, trace_execution
 
@@ -160,6 +166,7 @@ __all__ = [
     "ENGINE_CAPS", "ScanAgg", "GroupedScanAgg", "IterativeFit",
     "StreamAgg", "PhysicalPlan", "plan", "execute", "explain",
     "Session", "Handle", "Trace", "trace_execution",
+    "MaterializedHandle", "materialize",
     "Table", "GroupedView", "Aggregate", "FusedAggregate", "MERGE_SUM",
     "MERGE_MAX", "MERGE_MIN",
     "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",

@@ -192,7 +192,8 @@ class FusedAggregate(Aggregate):
 
 def run_many(aggs, table: Table, *, block_size: int | None = None,
              mask: jax.Array | None = None, jit: bool = True,
-             engine: str = "auto") -> Any:
+             engine: str = "auto", finalize: bool = True,
+             trace_kind: str = "scan") -> Any:
     """Execute several aggregates over ``table`` in ONE shared scan.
 
     ``engine="auto"`` picks the sharded engine when the table is
@@ -200,17 +201,23 @@ def run_many(aggs, table: Table, *, block_size: int | None = None,
     one — the hook the plan layer's cost-based selection drives (its
     choice must be what executes, not re-derived here).  Returns a dict
     when ``aggs`` is a mapping, else a tuple, ordered like the input.
+
+    ``finalize=False`` returns the raw fused fold state (a tuple of
+    member states) instead of finalized results — the retained-state
+    form materialized views pin and later merge with the members' own
+    combinators (see :mod:`repro.core.materialize`).
     """
     fused = _fused_for(aggs)
     if engine == "auto":
         engine = "sharded" if table.mesh is not None else "local"
     if engine == "sharded":
         return run_sharded(fused, table, block_size=block_size, mask=mask,
-                           jit=jit)
+                           jit=jit, finalize=finalize, trace_kind=trace_kind)
     if engine != "local":
         raise ValueError(f"unknown engine {engine!r} "
                          "(use 'auto', 'local' or 'sharded')")
-    return run_local(fused, table, block_size=block_size, mask=mask, jit=jit)
+    return run_local(fused, table, block_size=block_size, mask=mask, jit=jit,
+                     finalize=finalize, trace_kind=trace_kind)
 
 
 # Prepared-statement memo: re-executing the same aggregate set reuses
@@ -301,14 +308,15 @@ _LOCAL_JIT_CACHE: dict[tuple, tuple[Aggregate, Callable]] = {}
 _LOCAL_JIT_MAX = 256
 
 
-def _local_jit(agg: Aggregate, block_size):
-    key = (id(agg), block_size)
+def _local_jit(agg: Aggregate, block_size, finalize: bool = True):
+    key = (id(agg), block_size, finalize)
     hit = _LOCAL_JIT_CACHE.get(key)
     if hit is not None:
         return hit[1]
 
     def go(columns, mask):
-        return agg.final(_blocked_fold(agg, columns, mask, block_size))
+        state = _blocked_fold(agg, columns, mask, block_size)
+        return agg.final(state) if finalize else state
 
     fn = jax.jit(go)
     if len(_LOCAL_JIT_CACHE) >= _LOCAL_JIT_MAX:
@@ -318,15 +326,22 @@ def _local_jit(agg: Aggregate, block_size):
 
 
 def run_local(agg: Aggregate, table: Table, *, block_size: int | None = None,
-              mask: jax.Array | None = None, jit: bool = True) -> Any:
+              mask: jax.Array | None = None, jit: bool = True,
+              finalize: bool = True, trace_kind: str = "scan") -> Any:
     """Execute an aggregate on a single shard (PostgreSQL single-node
     mode).  Compiled programs are reused across calls with the same
-    aggregate instance (see ``_LOCAL_JIT_CACHE``)."""
-    _record("scan", engine="local", rows=table.n_rows)
+    aggregate instance (see ``_LOCAL_JIT_CACHE``).
+
+    ``finalize=False`` returns the raw fold state instead of
+    ``agg.final(state)`` — retained states stay mergeable with the
+    aggregate's combinators.  ``trace_kind`` labels the recorded event
+    ("scan" normally; the materialize layer passes "delta" when this
+    pass folds only appended rows)."""
+    _record(trace_kind, engine="local", rows=table.n_rows)
     if not jit:
-        return agg.final(_blocked_fold(agg, dict(table.columns), mask,
-                                       block_size))
-    return _local_jit(agg, block_size)(dict(table.columns), mask)
+        state = _blocked_fold(agg, dict(table.columns), mask, block_size)
+        return agg.final(state) if finalize else state
+    return _local_jit(agg, block_size, finalize)(dict(table.columns), mask)
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +351,8 @@ def run_local(agg: Aggregate, table: Table, *, block_size: int | None = None,
 def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
                 row_axes: tuple[str, ...] | None = None,
                 block_size: int | None = None,
-                mask: jax.Array | None = None, jit: bool = True) -> Any:
+                mask: jax.Array | None = None, jit: bool = True,
+                finalize: bool = True, trace_kind: str = "scan") -> Any:
     """Execute an aggregate in parallel across the mesh's row axes.
 
     Each shard folds its local rows (transition), states are merged across
@@ -350,8 +366,8 @@ def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
     row_axes = tuple(row_axes or table.row_axes or ("data",))
     if mesh is None:
         return run_local(agg, table, block_size=block_size, mask=mask,
-                         jit=jit)
-    _record("scan", engine="sharded", rows=table.n_rows)
+                         jit=jit, finalize=finalize, trace_kind=trace_kind)
+    _record(trace_kind, engine="sharded", rows=table.n_rows)
 
     in_spec = jax.tree.map(
         lambda v: row_pspec(row_axes, v.ndim), dict(table.columns)
@@ -362,7 +378,7 @@ def run_sharded(agg: Aggregate, table: Table, *, mesh: Mesh | None = None,
     def shard_fn(columns, mask):
         local = _blocked_fold(agg, columns, mask, block_size)
         merged = agg.mesh_merge(local, row_axes)
-        return agg.final(merged)
+        return agg.final(merged) if finalize else merged
 
     mapped = _compat_shard_map(
         shard_fn, mesh=mesh, in_specs=(in_spec, row_pspec(row_axes)),
@@ -551,13 +567,45 @@ def _mesh_segments(mesh: Mesh, row_axes: tuple[str, ...]) -> int:
     return int(np.prod([mesh.shape[a] for a in row_axes]))
 
 
+# Prepared-statement memo for the local segment path, keyed like
+# _LOCAL_JIT_CACHE (the jit object retraces by itself when block shapes
+# change, so block size is not part of the key).  Without it every
+# grouped pass re-traced from scratch — a fixed per-call cost that
+# dwarfed small folds such as a living view's delta refresh.
+_SEGMENT_JIT_CACHE: dict[tuple, tuple[Aggregate, Callable]] = {}
+_SEGMENT_JIT_MAX = 256
+
+
+def _segment_jit(agg: Aggregate, ops, G: int, finalize: bool, schema):
+    # schema is part of the key because templated aggregates derive their
+    # state tree (and thus ops) from the column set, not just the instance
+    key = (id(agg), G, finalize, schema)
+    hit = _SEGMENT_JIT_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    dummy_states = jnp.zeros((G,), jnp.int32)
+    group_final = jax.vmap(agg.final) if finalize else (lambda s: s)
+
+    def go_segment(columns, valid, bgids):
+        states = segment_fold(lambda _s: agg, dummy_states, ops,
+                              columns, valid, bgids, G)
+        return group_final(states)
+
+    fn = jax.jit(go_segment)
+    if len(_SEGMENT_JIT_CACHE) >= _SEGMENT_JIT_MAX:
+        _SEGMENT_JIT_CACHE.pop(next(iter(_SEGMENT_JIT_CACHE)))
+    _SEGMENT_JIT_CACHE[key] = (agg, fn)
+    return fn
+
+
 def run_grouped(agg: Aggregate, table, group_col: str | None = None,
                 num_groups: int | None = None, *,
                 block_size: int | None = None,
                 mask: jax.Array | None = None,
                 method: str = "auto", mesh: Mesh | None = None,
                 row_axes: tuple[str, ...] | None = None,
-                jit: bool = True) -> Any:
+                jit: bool = True, finalize: bool = True,
+                trace_kind: str = "scan") -> Any:
     """Grouped aggregation (``SELECT ..., agg(...) GROUP BY g``).
 
     ``table`` is either a :class:`Table` — grouped by its ``group_col``
@@ -592,6 +640,11 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
     segment fold for exact-state aggregates.  Generic-merge aggregates
     take a sharded masked path instead (local masked folds, all-gather
     generic merge).
+
+    ``finalize=False`` returns the stacked ``(G, ...)`` fold states
+    instead of ``vmap(final)`` results (the retained form materialized
+    grouped views merge group-wise); ``trace_kind`` labels the recorded
+    event as in :func:`run_local`.
     """
     view = table if isinstance(table, GroupedView) else None
     base_tbl = view.table if view is not None else table
@@ -628,8 +681,9 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
         ops = None  # forced masked, local: ops never consulted
     if method == "auto":
         method = "segment" if ops is not None else "masked"
-    _record("scan", engine=f"grouped-{method}", sharded=mesh is not None,
+    _record(trace_kind, engine=f"grouped-{method}", sharded=mesh is not None,
             groups=G)
+    group_final = jax.vmap(agg.final) if finalize else (lambda s: s)
 
     if method == "segment":
         if ops is None:
@@ -645,14 +699,19 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
 
         if mesh is None:
             cols_a, valid_a, bgids = view.aligned_blocks(bs, pmask)
+            if jit:
+                schema = tuple(sorted(
+                    (k, str(v.dtype), tuple(v.shape[1:]))
+                    for k, v in data.items()))
+                return _segment_jit(agg, ops, G, finalize, schema)(
+                    cols_a, valid_a, bgids)
 
             def go_segment(columns, valid, bgids):
                 states = segment_fold(lambda _s: agg, dummy_states, ops,
                                       columns, valid, bgids, G)
-                return jax.vmap(agg.final)(states)
+                return group_final(states)
 
-            fn = jax.jit(go_segment) if jit else go_segment
-            return fn(cols_a, valid_a, bgids)
+            return go_segment(cols_a, valid_a, bgids)
 
         # Sharded segment path: each segment folds its local chunk of
         # group-aligned blocks, per-group partials merge leaf-wise.
@@ -665,7 +724,7 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
             states = segment_fold(lambda _s: agg, dummy_states, ops,
                                   columns, valid, bgids, G)
             merged = merge_group_states(agg, ops, states, row_axes)
-            return jax.vmap(agg.final)(merged)
+            return group_final(merged)
 
         mapped = _compat_shard_map(
             shard_segment, mesh=mesh,
@@ -688,23 +747,23 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
     if mesh is not None:
         return _run_grouped_masked_sharded(
             agg, ops, data, gids, base_mask, G, block_size, mesh, row_axes,
-            jit)
+            jit, group_final)
 
     def go_masked(data, gids, mask):
         base = jnp.ones(gids.shape, jnp.bool_) if mask is None else mask
 
         def per_group(g):
-            state = _blocked_fold(agg, data, (gids == g) & base, block_size)
-            return agg.final(state)
+            return _blocked_fold(agg, data, (gids == g) & base, block_size)
 
-        return jax.vmap(per_group)(jnp.arange(G))
+        return group_final(jax.vmap(per_group)(jnp.arange(G)))
 
     fn = jax.jit(go_masked) if jit else go_masked
     return fn(data, gids, base_mask)
 
 
 def _run_grouped_masked_sharded(agg, ops, data, gids, base_mask, G,
-                                block_size, mesh, row_axes, jit_):
+                                block_size, mesh, row_axes, jit_,
+                                group_final):
     """Sharded masked path: every segment folds its LOCAL rows once per
     group (mask contract), per-group partial states merge across segments
     — leaf-wise collectives when available, the all-gather generic fold
@@ -732,7 +791,7 @@ def _run_grouped_masked_sharded(agg, ops, data, gids, base_mask, G,
 
         states = jax.vmap(per_group)(jnp.arange(G))
         merged = merge_group_states(agg, ops, states, row_axes)
-        return jax.vmap(agg.final)(merged)
+        return group_final(merged)
 
     mapped = _compat_shard_map(
         shard_masked, mesh=mesh,

@@ -1,0 +1,266 @@
+"""Incremental view maintenance — retained statements as living views.
+
+The paper's parallelization contract (§4.1: every aggregate ships a
+merge combinator so partial states from disjoint row sets compose
+exactly) is 90% of a materialized view: if a statement's fold state over
+rows ``[0:r]`` is retained, bringing it current after an append needs
+only the fold over rows ``[r:n]`` and ONE merge — never a rescan.  This
+module is that last 10%:
+
+* :class:`MaterializedHandle` pins (table **version**, plan
+  **fingerprint**, retained **fold state**) for one or several fused
+  scan statements;
+* :meth:`MaterializedHandle.refresh` consults :attr:`Table.version` /
+  :attr:`Table.epoch`: unchanged version -> no work; append-only growth
+  (same epoch) -> **delta fold** of the new rows merged in with the
+  members' own combinators (recorded as ``kind="delta"`` in the trace);
+  anything else (``invalidate``) -> full rescan;
+* exactness: for aggregates whose state arithmetic is exact (integer
+  sketches, histogram counts, dyadic-f32 sums) the delta-merged state is
+  **bit-identical** to a full rescan — the same associativity argument
+  that makes :func:`run_sharded` exact across segments.
+
+Grouped statements maintain stacked ``(G, ...)`` states and merge
+group-wise.  A delta whose keys stay inside the pinned group count folds
+incrementally; a delta introducing a NEW group id under
+``num_groups=None`` semantics falls back to a rescan (the full run would
+have grown ``G``).
+
+Statements with a base ``mask`` are rejected loudly: a row filter is
+row-aligned with one table version and cannot describe rows that did not
+exist when it was built — filter into a derived table instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .aggregates import (
+    _fused_for, probe_segment_ops, run_grouped, run_local, run_many,
+)
+from .plan import GroupedScanAgg, ScanAgg, _member_agg, statement_fingerprint
+from .table import GroupedView, Table
+
+__all__ = ["MaterializedHandle", "materialize"]
+
+
+class MaterializedHandle:
+    """A living view over one or more fused scan statements.
+
+    Built by :func:`materialize`; the constructor runs the initial full
+    fold.  :meth:`result` returns the finalized result(s), refreshing
+    first so reads are always current with the pinned table;
+    :meth:`refresh` brings the retained state current without
+    finalizing; :meth:`stale` says whether the table moved since the
+    last refresh.  Results come back as a single value when built from
+    one statement, else a list in statement order.
+    """
+
+    def __init__(self, nodes: Sequence, *, single: bool):
+        self.nodes = list(nodes)
+        self._single = single
+        base = self.nodes[0]
+        self.kind = "grouped" if isinstance(base, GroupedScanAgg) else "scan"
+        self._validate(base)
+        self.table: Table = base.table
+        self.block_size = base.block_size
+        self.jit = base.jit
+        self.fingerprint = tuple(statement_fingerprint(n)
+                                 for n in self.nodes)
+        self.members = [_member_agg(n) for n in self.nodes]
+        self.fused = _fused_for(self.members)
+        if self.kind == "scan":
+            self.engine = base.engine
+        else:
+            self.group_col = base.group_col
+            self.mesh = base.mesh
+            self.row_axes = base.row_axes
+            self._groups_fixed = base.num_groups is not None
+            self._groups_spec = base.num_groups
+            self._method = self._resolve_method(base.method)
+        # jitted merge/final programs, built lazily and retained with the
+        # handle (its prepared statements)
+        self._merge_fn = None
+        self._final_fn = None
+        self._result_cache: Any = None
+        self._full_build()
+
+    # -- validation --------------------------------------------------------
+    def _validate(self, base) -> None:
+        for n in self.nodes:
+            if type(n) is not type(base):
+                raise TypeError(
+                    "materialize: cannot mix scan and grouped statements "
+                    "in one handle")
+            if not isinstance(n, (ScanAgg, GroupedScanAgg)):
+                raise TypeError(
+                    f"materialize: not a retainable scan statement: {n!r} "
+                    "(fit and stream statements hold no mergeable state)")
+            if n.mask is not None:
+                raise ValueError(
+                    "materialize: masked statements are not supported — a "
+                    "base row filter is row-aligned with ONE table version "
+                    "and says nothing about appended rows; filter into a "
+                    "derived table and materialize that")
+            if isinstance(n.table, GroupedView):
+                raise TypeError(
+                    "materialize: grouped statements must reference the "
+                    "Table itself, not a prebuilt GroupedView — a view is "
+                    "a snapshot and carries no version to track")
+            if n.table is not base.table:
+                raise ValueError(
+                    "materialize: statements retain state over different "
+                    "tables; build one handle per table")
+            if (n.block_size, n.jit) != (base.block_size, base.jit):
+                raise ValueError("materialize: members disagree on "
+                                 "block_size/jit")
+        if self.kind == "grouped":
+            key = (base.group_col, base.num_groups, base.method,
+                   id(base.mesh), base.row_axes)
+            for n in self.nodes:
+                if (n.group_col, n.num_groups, n.method, id(n.mesh),
+                        n.row_axes) != key:
+                    raise ValueError(
+                        "materialize: grouped members disagree on "
+                        "group_col/num_groups/method/mesh/row_axes")
+        else:
+            if len({n.engine for n in self.nodes}) > 1:
+                raise ValueError("materialize: members disagree on engine")
+
+    def _resolve_method(self, method: str) -> str:
+        """Pin segment vs masked once — build, rescans and delta folds
+        must all take the same path (same state partitioning story)."""
+        if method != "auto":
+            return method
+        data = {k: v for k, v in self.table.columns.items()
+                if k != self.group_col}
+        for m in self.members:
+            try:
+                ok = probe_segment_ops(m, data) is not None
+            except Exception:
+                ok = False
+            if not ok:
+                return "masked"
+        return "segment"
+
+    # -- state building ----------------------------------------------------
+    def _pin(self, state, n_rows: int) -> None:
+        self._state = state
+        self._version = self.table.version
+        self._epoch = self.table.epoch
+        self._n_rows = n_rows
+        self._result_cache = None
+
+    def _full_build(self) -> None:
+        t = self.table
+        if self.kind == "scan":
+            state = run_many(self.members, t, block_size=self.block_size,
+                             jit=self.jit, engine=self.engine,
+                             finalize=False)
+        else:
+            G = self._groups_spec
+            if G is None:
+                gids = t[self.group_col].astype(jnp.int32)
+                G = int(jax.device_get(jnp.max(gids))) + 1
+            self._G = G
+            state = run_grouped(self.fused, t, self.group_col,
+                                num_groups=G, block_size=self.block_size,
+                                method=self._method, mesh=self.mesh,
+                                row_axes=self.row_axes, jit=self.jit,
+                                finalize=False)
+        self._pin(state, t.n_rows)
+
+    def _delta_fold(self) -> bool:
+        """Fold ONLY rows ``[pinned:]`` and merge into the retained
+        state; returns False when delta semantics cannot match a full
+        rescan (a new group id under open group-count semantics)."""
+        t = self.table
+        delta_cols = {k: v[self._n_rows:] for k, v in t.columns.items()}
+        delta = Table(delta_cols)
+        if self.kind == "scan":
+            new = run_local(self.fused, delta, block_size=self.block_size,
+                            jit=self.jit, finalize=False,
+                            trace_kind="delta")
+        else:
+            G = self._G
+            if not self._groups_fixed:
+                mx = int(jax.device_get(jnp.max(
+                    delta_cols[self.group_col].astype(jnp.int32))))
+                if mx >= G:
+                    return False  # full run would have grown num_groups
+            # The aligned layout pads every group segment to whole blocks,
+            # so a small delta folded at the build block size would pay
+            # G * block_size padded rows.  Shrink the delta block toward
+            # ~1 block per group: exact-state merges are partition-
+            # independent, so the merged state stays bit-identical.
+            per_g = -(-delta.n_rows // max(G, 1))
+            bs = max(64, min(self.block_size or 4096,
+                             1 << max(per_g - 1, 0).bit_length()))
+            new = run_grouped(self.fused, delta, self.group_col,
+                              num_groups=G, block_size=bs,
+                              method=self._method, mesh=None, jit=self.jit,
+                              finalize=False, trace_kind="delta")
+        if self._merge_fn is None:
+            fn = self.fused.merge if self.kind == "scan" \
+                else jax.vmap(self.fused.merge)
+            self._merge_fn = jax.jit(fn) if self.jit else fn
+        self._pin(self._merge_fn(self._state, new), t.n_rows)
+        return True
+
+    # -- the living-view API -----------------------------------------------
+    def stale(self) -> bool:
+        """Has the table mutated since the retained state was pinned?"""
+        return self.table.version != self._version
+
+    def refresh(self) -> "MaterializedHandle":
+        """Bring the retained state current.  No-op at the pinned
+        version; a pure append (epoch unchanged) delta-folds the new
+        rows; anything else rescans."""
+        t = self.table
+        if t.version == self._version:
+            return self
+        if t.epoch == self._epoch and t.n_rows >= self._n_rows:
+            if t.n_rows == self._n_rows:  # empty append
+                self._version = t.version
+                return self
+            if self._delta_fold():
+                return self
+        self._full_build()
+        return self
+
+    def result(self, *, refresh: bool = True) -> Any:
+        """Finalized result(s) at the current table version (refreshing
+        first unless ``refresh=False``), cached per pinned state."""
+        if refresh:
+            self.refresh()
+        if self._result_cache is None:
+            if self._final_fn is None:
+                fn = self.fused.final if self.kind == "scan" \
+                    else jax.vmap(self.fused.final)
+                self._final_fn = jax.jit(fn) if self.jit else fn
+            self._result_cache = self._final_fn(self._state)
+        outs = self._result_cache
+        return outs[0] if self._single else list(outs)
+
+
+def materialize(statements) -> MaterializedHandle:
+    """Retain one statement (or a compatible batch sharing one scan) as
+    a :class:`MaterializedHandle` — the initial fold runs immediately::
+
+        h = materialize(ScanAgg(agg, tbl))
+        tbl.append(new_rows)
+        h.result()      # delta fold + merge, NOT a rescan
+
+    ``statements`` is a single :class:`~repro.core.plan.ScanAgg` /
+    :class:`~repro.core.plan.GroupedScanAgg` or a sequence of them (all
+    over the same table; results then come back as a list).
+    """
+    if isinstance(statements, (ScanAgg, GroupedScanAgg)):
+        return MaterializedHandle([statements], single=True)
+    nodes = list(statements)
+    if not nodes:
+        raise ValueError("materialize: empty statement batch")
+    return MaterializedHandle(nodes, single=False)

@@ -359,6 +359,29 @@ def _mask_key(mask) -> Any:
     return None if mask is None else id(mask)
 
 
+def statement_fingerprint(node) -> tuple:
+    """Stable identity of a retained statement's physical shape — what a
+    :class:`~repro.core.materialize.MaterializedHandle` pins alongside
+    the table version.  Two statements share a fingerprint iff refreshing
+    one's retained state is valid for the other: same aggregate instance,
+    projection, grouping, partitioning and engine knobs.  The table is
+    deliberately NOT part of the fingerprint — the handle pins the table
+    object itself and tracks its version separately."""
+    proj = _normalize_projection(getattr(node, "columns", None))
+    proj_key = None if proj is None else tuple(sorted(proj.items()))
+    if isinstance(node, ScanAgg):
+        return ("scan", id(node.agg), proj_key, _mask_key(node.mask),
+                node.block_size, node.engine, node.jit)
+    if isinstance(node, GroupedScanAgg):
+        return ("grouped", id(node.agg), proj_key, node.group_col,
+                node.num_groups, _mask_key(node.mask), node.block_size,
+                node.method,
+                id(node.mesh) if node.mesh is not None else None,
+                tuple(node.row_axes) if node.row_axes else None, node.jit)
+    raise TypeError(f"statement_fingerprint: not a retainable scan "
+                    f"statement: {node!r}")
+
+
 @dataclasses.dataclass
 class PhysicalPass:
     """One physical engine execution covering >= 1 statements."""
@@ -439,8 +462,11 @@ def _resolve_groups(node) -> int:
     if node.num_groups is not None:
         return int(node.num_groups)
     # re-planning the same statement (explain + run, bench reps): reuse
-    # the memoized view's count instead of re-reducing the id column
-    view = node.table._gb_cache.get((node.group_col, None))
+    # the memoized view's count instead of re-reducing the id column.
+    # Goes through the version-checked accessor, so a view outdated by
+    # Table.append / invalidate can never leak into the plan — appended
+    # rows may introduce new group ids.
+    view = node.table.cached_group_by(node.group_col, None)
     if view is not None:
         return view.num_groups
     gids = node.table[node.group_col].astype(jnp.int32)

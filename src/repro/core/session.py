@@ -68,6 +68,7 @@ class Session:
         self._posts: list = []
         self._handles: list[Handle] = []
         self._derived: list[tuple[Handle, list[Handle], Callable]] = []
+        self._materialized: list = []
         self.last_plan = None
 
     # -- generic statements ----------------------------------------------
@@ -110,6 +111,25 @@ class Session:
                     post=None) -> Handle:
         return self.statement(StreamAgg(agg, blocks, columns=columns,
                                         label=label), post=post)
+
+    # -- living views -------------------------------------------------------
+    def materialize(self, *nodes):
+        """Retain statement(s) as a living view: the initial fold runs
+        NOW (not batched with :meth:`run`), and the returned
+        :class:`~repro.core.materialize.MaterializedHandle` delta-folds
+        appended rows on every later read — the always-fresh-dashboard
+        pattern.  Several compatible statements share one retained scan.
+        """
+        from .materialize import materialize as _materialize
+        h = _materialize(nodes[0] if len(nodes) == 1 else list(nodes))
+        self._materialized.append(h)
+        return h
+
+    def refresh(self) -> list:
+        """Bring every living view issued through :meth:`materialize`
+        current with its table and return their results, in issue
+        order."""
+        return [h.result() for h in self._materialized]
 
     def _derive(self, parts: list[Handle], combine: Callable) -> Handle:
         h = Handle(f"d{len(self._derived)}")

@@ -46,11 +46,21 @@ class Table:
     columns: dict[str, jax.Array]
     mesh: Mesh | None = None
     row_axes: tuple[str, ...] = ()
-    # group_by memo: (key_col, num_groups) -> GroupedView.  Host-side state
-    # private to this instance — never flattened into the pytree, compared
-    # or hashed; derived tables (select/with_column/...) start empty.
+    # group_by memo: (key_col, num_groups) -> (version, GroupedView).
+    # Host-side state private to this instance — never flattened into the
+    # pytree, compared or hashed; derived tables (select/with_column/...)
+    # start empty.  Entries are stamped with the table version they were
+    # built at, so every lookup observes staleness (see group_by).
     _gb_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # Versioning (the IVM contract): ``_version`` bumps on EVERY mutation
+    # (append or invalidate); ``_epoch`` bumps only on non-append
+    # mutations (invalidate).  A retained fold state pinned at
+    # (version v, epoch e, n_rows r) may be brought current by folding
+    # ONLY rows [r:] iff the table's epoch is still e — the row prefix is
+    # then guaranteed unchanged.  Host-side, never part of the pytree.
+    _version: int = dataclasses.field(default=0, repr=False, compare=False)
+    _epoch: int = dataclasses.field(default=0, repr=False, compare=False)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -99,15 +109,40 @@ class Table:
     def select(self, *names: str) -> "Table":
         return Table({n: self.columns[n] for n in names}, self.mesh, self.row_axes)
 
+    def _place_rows(self, columns: dict) -> dict:
+        """Re-place columns to this table's row sharding (no-op host-local).
+
+        Every method that returns a Table carrying this table's
+        ``mesh`` / ``row_axes`` MUST route fresh columns through here —
+        otherwise the result lies about its layout to the sharded
+        engines (new arrays would stay ``SingleDeviceSharding``).
+        """
+        if self.mesh is None:
+            return columns
+        from ..distributed.sharding import distribute_rows
+        segs = int(np.prod([self.mesh.shape[a] for a in self.row_axes]))
+        n = _n_rows(columns)
+        if n % segs:
+            raise ValueError(
+                f"n_rows={n} not divisible by {segs} segments of the "
+                f"table's mesh; pad before distributing")
+        return distribute_rows(self.mesh, self.row_axes, columns)
+
     def with_column(self, name: str, values: jax.Array) -> "Table":
         cols = dict(self.columns)
-        cols[name] = values
+        cols[name] = jnp.asarray(values)
         _n_rows(cols)
+        if self.mesh is not None:
+            from ..distributed.sharding import row_sharding
+            cols[name] = jax.device_put(
+                cols[name],
+                row_sharding(self.mesh, self.row_axes, cols[name].ndim))
         return Table(cols, self.mesh, self.row_axes)
 
     def map_rows(self, fn: Callable[[Columns], Columns]) -> "Table":
         """Row-wise projection (a SELECT of expressions); traced & fused by XLA."""
-        return Table(dict(fn(self.columns)), self.mesh, self.row_axes)
+        return Table(self._place_rows(dict(fn(self.columns))),
+                     self.mesh, self.row_axes)
 
     def pad_to(self, n: int, fill: float = 0.0) -> tuple["Table", jax.Array]:
         """Pad to ``n`` rows; returns (padded table with a __valid__ mask column)."""
@@ -119,6 +154,11 @@ class Table:
             pad = [(0, n - cur)] + [(0, 0)] * (v.ndim - 1)
             cols[k] = jnp.pad(v, pad, constant_values=fill)
         mask = jnp.arange(n) < cur
+        if self.mesh is not None:
+            from ..distributed.sharding import row_sharding
+            cols = self._place_rows(cols)
+            mask = jax.device_put(
+                mask, row_sharding(self.mesh, self.row_axes, mask.ndim))
         return Table(cols, self.mesh, self.row_axes), mask
 
     def blocks(self, block_size: int) -> Iterator["Table"]:
@@ -154,7 +194,10 @@ class Table:
         Table instance, so every grouped statement and every
         ``fit_grouped`` over the same key shares ONE partitioning sort —
         the plan layer's sort dedup rests on this cache.  A ``None``
-        group count also caches under its resolved value.  Derived
+        group count also caches under its resolved value.  Entries are
+        stamped with the table :attr:`version`, so :meth:`append` and
+        :meth:`invalidate` retire them automatically — a hit is served
+        only when the stamp matches the current version.  Derived
         tables (``select`` / ``with_column`` / ...) are new instances
         with empty caches; mutating ``columns`` in place requires an
         explicit :meth:`invalidate`.
@@ -163,19 +206,100 @@ class Table:
         the permuted table but outside every segment; grouped engines
         ignore them, matching the masked semantics of ``gid == g``.
         """
-        hit = self._gb_cache.get((key_col, num_groups))
-        if hit is not None:
-            return hit
+        view = self.cached_group_by(key_col, num_groups)
+        if view is not None:
+            return view
         view = self._group_by_uncached(key_col, num_groups)
-        self._gb_cache[(key_col, num_groups)] = view
-        self._gb_cache[(key_col, view.num_groups)] = view
+        self._gb_cache[(key_col, num_groups)] = (self._version, view)
+        self._gb_cache[(key_col, view.num_groups)] = (self._version, view)
         return view
 
+    def cached_group_by(self, key_col: str, num_groups: int | None = None
+                        ) -> "GroupedView | None":
+        """Version-checked :meth:`group_by` memo lookup: the memoized view
+        for ``(key_col, num_groups)`` if one exists AND was built at the
+        table's current :attr:`version`, else ``None``.  Never sorts.
+
+        This is the ONLY sanctioned way for code outside this class (the
+        plan layer's cost model, method wrappers) to peek at the memo —
+        a direct ``_gb_cache`` read would resurrect views that an
+        :meth:`append` or :meth:`invalidate` has already outdated.
+        """
+        hit = self._gb_cache.get((key_col, num_groups))
+        if hit is None or hit[0] != self._version:
+            return None
+        return hit[1]
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter.  Bumped by :meth:`append` and
+        :meth:`invalidate`; anything caching state derived from this
+        table's rows (group_by views, retained fold states, prepared
+        programs keyed on table identity) must stamp the version it read
+        and treat a mismatch as stale."""
+        return self._version
+
+    @property
+    def epoch(self) -> int:
+        """Append-survivor counter.  Bumped only by :meth:`invalidate`
+        (arbitrary mutation); NOT by :meth:`append`.  While the epoch is
+        unchanged, the row prefix ``[0:r]`` observed at any earlier
+        version is guaranteed intact, so retained fold states may be
+        brought current by folding only the appended suffix (the
+        incremental-view-maintenance contract)."""
+        return self._epoch
+
+    def append(self, columns: Columns) -> "Table":
+        """Append rows in place (the append-only ingest path) and bump
+        :attr:`version`.
+
+        ``columns`` must carry exactly this table's columns with matching
+        dtypes and trailing shapes.  Existing rows are untouched —
+        :attr:`epoch` does NOT bump — so retained statements
+        (:func:`repro.core.materialize`) refresh by delta-folding only
+        the new rows and merging with the aggregates' own combinators.
+        Memoized :meth:`group_by` views are invalidated automatically via
+        the version stamp (a later ``group_by`` re-sorts).
+
+        On a distributed table the concatenated columns are re-placed
+        over the mesh; the new row count must still divide the segment
+        count.  Returns ``self`` for chaining.
+        """
+        new = {k: jnp.asarray(v) for k, v in columns.items()}
+        if set(new) != set(self.columns):
+            raise ValueError(
+                f"append columns {sorted(new)} != table columns "
+                f"{sorted(self.columns)}")
+        _n_rows(new)
+        cols = {}
+        for k, old in self.columns.items():
+            v = new[k]
+            if v.dtype != old.dtype:
+                raise ValueError(
+                    f"append column {k!r}: dtype {v.dtype} != {old.dtype}")
+            if v.shape[1:] != old.shape[1:]:
+                raise ValueError(
+                    f"append column {k!r}: trailing shape {v.shape[1:]} "
+                    f"!= {old.shape[1:]}")
+            cols[k] = jnp.concatenate([old, v], axis=0)
+        cols = self._place_rows(cols)
+        self.columns.clear()
+        self.columns.update(cols)
+        self._version += 1
+        return self
+
     def invalidate(self) -> None:
-        """Drop every memoized :meth:`group_by` view.  Required only after
-        mutating ``columns`` in place — functional derivations already
-        return fresh instances with empty caches."""
+        """Declare arbitrary in-place mutation: drops every memoized
+        :meth:`group_by` view and bumps BOTH :attr:`version` and
+        :attr:`epoch`, so every downstream cache — gb memo, retained
+        materialized states, plan-time cost lookups — observes staleness
+        instead of relying on caller discipline.  Functional derivations
+        (``select`` / ``with_column`` / ...) never need this; they return
+        fresh instances.  Use :meth:`append` for append-only growth — it
+        keeps the epoch so incremental refresh stays possible."""
         self._gb_cache.clear()
+        self._version += 1
+        self._epoch += 1
 
     def _group_by_uncached(self, key_col: str, num_groups: int | None
                            ) -> "GroupedView":
@@ -260,8 +384,18 @@ class GroupedView:
         ppg = bpg * bs          # padded rows per group
         n2 = int(ppg.sum())
         if n2 == 0:
-            cols = {k: v[:0] for k, v in self.table.columns.items()}
-            return cols, jnp.zeros((0,), jnp.bool_), jnp.asarray(bg_np)
+            # No real blocks (all groups empty / every id out of range).
+            # Still honour pad_blocks_to: emit that many sentinel blocks
+            # so sharded layouts keep their every-segment-owns-whole-
+            # blocks contract even for an empty view.  Sentinel columns
+            # are constructed, not gathered — the table may have 0 rows.
+            pad = int(pad_blocks_to) if pad_blocks_to else 0
+            cols = {
+                k: jnp.zeros((pad * bs,) + v.shape[1:], v.dtype)
+                for k, v in self.table.columns.items()
+            }
+            return (cols, jnp.zeros((pad * bs,), jnp.bool_),
+                    jnp.full((pad,), self.num_groups, jnp.int32))
         grp = np.repeat(np.arange(self.num_groups), ppg)
         out_start = np.concatenate([[0], np.cumsum(ppg)])[:-1]
         local = np.arange(n2) - out_start[grp]

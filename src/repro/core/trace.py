@@ -5,9 +5,12 @@ pass"; this module is how that claim is *checked* instead of asserted.
 Every execution engine records one event per physical data pass
 (``kind="scan"``), :meth:`Table.group_by` records one event per
 partitioning sort actually performed (``kind="sort"`` — cache hits are
-silent), and the iterative engines record one event per fit
-(``kind="fit"``).  ``tests/test_plan.py`` and ``benchmarks/bench_plan.py``
-wrap executions in :func:`trace_execution` and count.
+silent), the iterative engines record one event per fit
+(``kind="fit"``), and a materialized-handle refresh that folds only
+appended rows records its pass as ``kind="delta"`` instead of a scan —
+so tests can assert "this refresh did NOT rescan the table".
+``tests/test_plan.py`` and ``benchmarks/bench_plan.py`` wrap executions
+in :func:`trace_execution` and count.
 
 Events are recorded host-side at engine entry (never inside a traced
 function), so the counters see physical engine executions: a fused
@@ -26,7 +29,7 @@ from typing import Any, Iterator
 
 @dataclasses.dataclass
 class Event:
-    kind: str               # "scan" | "sort" | "fit"
+    kind: str               # "scan" | "sort" | "fit" | "delta"
     engine: str | None      # "local" / "sharded" / "grouped-segment" / ...
     detail: dict[str, Any]
 
@@ -51,6 +54,10 @@ class Trace:
     @property
     def fits(self) -> list[Event]:
         return self._kind("fit")
+
+    @property
+    def deltas(self) -> list[Event]:
+        return self._kind("delta")
 
 
 _ACTIVE: list[Trace] = []

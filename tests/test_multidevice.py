@@ -216,6 +216,44 @@ def test_sharded_fit_grouped_8dev():
     assert "FITGROUPED-OK" in out
 
 
+def test_ivm_empty_view_and_sharding_8dev():
+    """PR-6 regressions at real device counts: (a) a sharded grouped
+    pass over an all-empty view consumes the sentinel-padded block
+    layout (every segment owns whole blocks even with 0 real rows);
+    (b) derived columns on a distributed table are actually row-sharded
+    over the 8 devices, and append re-places the grown table."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.core import Table, run_grouped
+        from repro.core.compat import make_mesh
+        from repro.methods.linregr import LinregrAggregate
+        mesh = make_mesh((8,), ("data",))
+        # (a) all ids out of range -> every group empty
+        t = Table.from_columns({
+            "g": jnp.full((64,), -1, jnp.int32),
+            "x": jnp.ones((64, 2)), "y": jnp.ones((64,))})
+        view = t.group_by("g", 5)
+        cols, valid, bgids = view.sharded_blocks(mesh, block_size=4)
+        assert bgids.shape[0] == 8 and bgids.shape[0] % 8 == 0
+        assert not bool(valid.any())
+        out = run_grouped(LinregrAggregate(), view, mesh=mesh,
+                          block_size=4)
+        np.testing.assert_array_equal(np.asarray(out.num_rows),
+                                      np.zeros(5))
+        # (b) sharding invariants across with_column / append
+        t2 = Table.from_columns({"a": jnp.arange(64.0)}).distribute(mesh)
+        t3 = t2.with_column("b", jnp.arange(64.0) * 2)
+        assert isinstance(t3["b"].sharding, NamedSharding)
+        assert len(t3["b"].sharding.device_set) == 8
+        t3.append({"a": jnp.arange(16.0), "b": jnp.arange(16.0)})
+        assert t3.n_rows == 80 and t3.version == 1
+        assert len(t3["a"].sharding.device_set) == 8
+        print("IVM-OK", len(jax.devices()))
+    """)
+    assert "IVM-OK 8" in out
+
+
 def test_compressed_psum_8dev():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
