@@ -16,6 +16,13 @@ masked-vmap lowering.
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU
     smoke).  Emits per-device-count rows_per_sec / iters_per_sec JSON.
 
+  * ``--kernel={auto,ref,pallas}`` — which segment-fold implementation
+    the linregr transitions route through (``use_kernel=`` on the
+    aggregate): the registry-dispatched jnp ref, the Pallas kernel
+    (interpret mode off-TPU — correctness path, not a throughput
+    number), or auto.  The JSON records the RESOLVED kernel name from
+    the execution trace plus blocks/sec of the segment scan.
+
 ``run()`` feeds the CSV harness (benchmarks/run.py); ``python -m
 benchmarks.bench_grouped [--json out.json]`` emits a JSON document for
 the bench trajectory and the CI smoke artifact.
@@ -25,11 +32,13 @@ from __future__ import annotations
 
 import json
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Table, fit_grouped, run_grouped
+from repro.core import Table, fit_grouped, run_grouped, trace_execution
+from repro.core.aggregates import segment_block_size
 from repro.methods.linregr import LinregrAggregate
 from repro.methods.logregr import IRLSTask
 
@@ -82,21 +91,39 @@ def _time(fn, reps: int) -> float:
 
 
 def bench(rows: int = 200_000, dims: int = 8, groups: int = 64,
-          fit_groups: int = 64, max_iters: int = 25, reps: int = 3) -> dict:
+          fit_groups: int = 64, max_iters: int = 25, reps: int = 3,
+          kernel: str = "auto") -> dict:
     key = jax.random.PRNGKey(0)
     out: dict = {"config": {"rows": rows, "dims": dims, "groups": groups,
                             "fit_groups": fit_groups,
-                            "max_iters": max_iters, "reps": reps}}
+                            "max_iters": max_iters, "reps": reps,
+                            "kernel": kernel}}
 
     # --- one-pass: run_grouped linregr states, segment vs masked ---------
     tbl = _grouped_table(key, rows, dims, groups)
     view = tbl.group_by("g", groups)  # sort paid once, outside the timer
-    agg = LinregrAggregate()
+    agg = LinregrAggregate(use_kernel=kernel)
     one_pass = {}
-    for method in ("segment", "masked"):
-        s = _time(lambda m=method: run_grouped(agg, view, method=m), reps)
-        one_pass[method] = {"seconds": s,
-                            "rows_per_sec": rows / s}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # forced-pallas interpret note
+        for method in ("segment", "masked"):
+            s = _time(lambda m=method: run_grouped(agg, view, method=m),
+                      reps)
+            one_pass[method] = {"seconds": s,
+                                "rows_per_sec": rows / s}
+        # resolved kernel + blocks/sec of the segment scan, from the trace
+        with trace_execution() as t:
+            run_grouped(agg, view, method="segment")
+    bs = segment_block_size(rows, groups)
+    nb = int(view.aligned_blocks(bs)[2].shape[0])
+    ev = t.kernels[0] if t.kernels else None
+    one_pass["kernel"] = {
+        "requested": kernel,
+        "resolved": None if ev is None else ev.engine,
+        "name": None if ev is None else ev.detail["name"],
+        "blocks": nb,
+        "blocks_per_sec": nb / one_pass["segment"]["seconds"],
+    }
     one_pass["segment_speedup"] = \
         one_pass["masked"]["seconds"] / one_pass["segment"]["seconds"]
     out["run_grouped"] = one_pass
@@ -252,6 +279,10 @@ if __name__ == "__main__":
     ap.add_argument("--fit-groups", type=int, default=64)
     ap.add_argument("--iters", type=int, default=25)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--kernel", choices=("auto", "ref", "pallas"),
+                    default="auto",
+                    help="segment-fold implementation for the one-pass "
+                         "linregr scan (pallas runs interpret off-TPU)")
     ap.add_argument("--sharded", action="store_true",
                     help="device-count scaling of the sharded grouped "
                          "engine instead of the segment-vs-masked bench")
@@ -263,7 +294,7 @@ if __name__ == "__main__":
     else:
         doc = bench(rows=args.rows, groups=args.groups,
                     fit_groups=args.fit_groups, max_iters=args.iters,
-                    reps=args.reps)
+                    reps=args.reps, kernel=args.kernel)
     text = json.dumps(doc, indent=2)
     if args.json:
         with open(args.json, "w") as f:

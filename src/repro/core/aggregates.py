@@ -50,6 +50,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..distributed.sharding import distribute_rows, row_pspec
+from . import calibration as _calibration
 from .compat import shard_map as _compat_shard_map
 from .table import GroupedView, Table, Columns
 from .trace import record as _record
@@ -77,6 +78,33 @@ class Aggregate:
     """
 
     merge_ops: Any = MERGE_SUM
+
+    # -- registered segment-fold kernel hook ---------------------------------
+    # Aggregates with a hand-tiled grouped kernel name it here (a key in
+    # kernels/registry.py, e.g. "segment_linregr"); ``kernel_impl`` is the
+    # resolved dispatch policy from the method layer's ``use_kernel`` flag
+    # (None = inline jnp segment fold, the default).  ``cost_class`` names
+    # the calibration bucket the planner prices this aggregate under.
+    segment_kernel: str | None = None
+    kernel_impl: str | None = None
+    cost_class: str = "generic"
+
+    def segment_kernel_args(self, columns: Columns, valid, block_gids,
+                            num_groups: int):
+        """(args, kwargs) for this aggregate's registered segment kernel —
+        pure extraction from the group-aligned layout, so it also runs on
+        ``ShapeDtypeStruct`` columns for host-side resolution."""
+        raise NotImplementedError
+
+    def segment_kernel_fold(self, columns: Columns, valid, block_gids,
+                            num_groups: int, impl: str):
+        """Whole-fold (G, ...) state stack via the registered kernel
+        (fold-from-zero; the caller merges with the per-group inits)."""
+        from ..kernels import registry as _kernels
+        args, kwargs = self.segment_kernel_args(columns, valid, block_gids,
+                                                num_groups)
+        return _kernels.dispatch(self.segment_kernel, *args, impl=impl,
+                                 _record=False, **kwargs)
 
     # -- to implement --------------------------------------------------------
     def init(self, block: Columns) -> S:  # block may hold tracers; use shapes only
@@ -182,6 +210,31 @@ class FusedAggregate(Aggregate):
         if any(o is None for o in ops):
             return None  # one generic-merge member poisons the fused pass
         return ops
+
+    # A single-member fusion (what the plan layer builds for a lone
+    # grouped statement) forwards its member's kernel hook, so the fused
+    # wrapper doesn't hide the fast path.  Multi-member fusions fold
+    # heterogeneous states in one scan — no single kernel covers them.
+    @property
+    def segment_kernel(self):
+        return self.aggs[0].segment_kernel if len(self.aggs) == 1 else None
+
+    @property
+    def kernel_impl(self):
+        return self.aggs[0].kernel_impl if len(self.aggs) == 1 else None
+
+    @property
+    def cost_class(self):
+        return self.aggs[0].cost_class if len(self.aggs) == 1 else "generic"
+
+    def segment_kernel_args(self, columns, valid, block_gids, num_groups):
+        return self.aggs[0].segment_kernel_args(columns, valid, block_gids,
+                                                num_groups)
+
+    def segment_kernel_fold(self, columns, valid, block_gids, num_groups,
+                            impl):
+        return (self.aggs[0].segment_kernel_fold(
+            columns, valid, block_gids, num_groups, impl),)
 
     def final(self, state):
         outs = tuple(a.final(s) for a, s in zip(self.aggs, state))
@@ -484,9 +537,16 @@ def segment_block_size(n_rows: int, num_groups: int,
                        block_size: int | None = None) -> int:
     """Block size for the group-aligned layout: near the average segment
     (padding overhead is one partial block per group), power-of-two,
-    clamped to [64, _SEGMENT_BLOCK].  An explicit ``block_size`` wins."""
+    clamped to [64, _SEGMENT_BLOCK].  An explicit ``block_size`` wins;
+    an ACTIVE measured calibration's best block for this shape bucket
+    beats the heuristic (see :mod:`repro.core.calibration`)."""
     if block_size is not None:
         return max(1, int(block_size))
+    cal = _calibration.current()
+    if cal is not None:
+        b = cal.grouped_block_size(n_rows, num_groups)
+        if b:
+            return max(1, int(b))
     avg = max(1, -(-n_rows // max(1, num_groups)))
     return max(64, min(_SEGMENT_BLOCK, 1 << (avg - 1).bit_length()))
 
@@ -510,7 +570,8 @@ def segment_block_update(make_agg, group_states, ops, blk: Columns,
 
 def segment_fold(make_agg, group_states, ops, columns: Columns,
                  valid: jax.Array, block_gids: jax.Array,
-                 num_groups: int) -> Any:
+                 num_groups: int, *, agg: Aggregate | None = None,
+                 kernel_impl: str | None = None) -> Any:
     """Fold EVERY group's state in ONE O(n) blocked scan (jit-traceable).
 
     Consumes the group-aligned layout of
@@ -528,6 +589,14 @@ def segment_fold(make_agg, group_states, ops, columns: Columns,
     ``make_agg(state_g)`` builds the (possibly per-group-parameterized)
     aggregate; pass ``lambda _: agg`` with dummy states for a uniform
     aggregate.
+
+    ``agg`` + ``kernel_impl`` engage the aggregate's registered
+    segment-fold kernel (resolved host-side, see
+    :func:`_resolve_segment_kernel`): the whole fold runs as ONE fused
+    Pallas grid loop (or its jnp ref oracle) computing the fold-from-zero
+    state stack, then merges with the vmapped per-group inits under the
+    leaf combinators — bit-identical to the generic scan for exact-state
+    aggregates because init is the merge identity.
     """
     lead = jax.tree.leaves(group_states)[0].shape[0]
     if lead != num_groups:
@@ -537,6 +606,11 @@ def segment_fold(make_agg, group_states, ops, columns: Columns,
     nb = block_gids.shape[0]
     if nb == 0:
         return inits
+    if kernel_impl is not None and agg is not None \
+            and getattr(agg, "segment_kernel", None):
+        kstates = agg.segment_kernel_fold(columns, valid, block_gids,
+                                          num_groups, kernel_impl)
+        return jax.tree.map(_combine_leaf, ops, inits, kstates)
     n2 = next(iter(columns.values())).shape[0]
     bs = n2 // nb
     blocks = {k: v.reshape((nb, bs) + v.shape[1:]) for k, v in columns.items()}
@@ -576,10 +650,33 @@ _SEGMENT_JIT_CACHE: dict[tuple, tuple[Aggregate, Callable]] = {}
 _SEGMENT_JIT_MAX = 256
 
 
-def _segment_jit(agg: Aggregate, ops, G: int, finalize: bool, schema):
+def _resolve_segment_kernel(agg: Aggregate, columns, valid, bgids,
+                            num_groups: int) -> str | None:
+    """Host-side kernel resolution for ONE physical grouped execution:
+    which implementation of the aggregate's registered segment kernel
+    runs (``"ref"``/``"pallas"``), or None for the inline jnp segment
+    fold (no kernel requested).  Runs the registry's resolve on the
+    concrete shapes (``ShapeDtypeStruct`` works) BEFORE tracing, so a
+    forced ``impl="pallas"`` an unsupported backend/shape cannot take
+    fails loudly here, and records the resolved impl on active traces —
+    once per execution, not per traced dispatch."""
+    name = getattr(agg, "segment_kernel", None)
+    impl = getattr(agg, "kernel_impl", None)
+    if name is None or impl is None:
+        return None
+    from ..kernels import registry as _kernels
+    args, kwargs = agg.segment_kernel_args(columns, valid, bgids, num_groups)
+    resolved, _tuned = _kernels.get(name).resolve(impl, *args, **kwargs)
+    _record("kernel", engine=resolved, name=name, requested=impl)
+    return resolved
+
+
+def _segment_jit(agg: Aggregate, ops, G: int, finalize: bool, schema,
+                 seg_impl: str | None = None):
     # schema is part of the key because templated aggregates derive their
-    # state tree (and thus ops) from the column set, not just the instance
-    key = (id(agg), G, finalize, schema)
+    # state tree (and thus ops) from the column set, not just the
+    # instance; seg_impl because the resolved kernel changes the program
+    key = (id(agg), G, finalize, schema, seg_impl)
     hit = _SEGMENT_JIT_CACHE.get(key)
     if hit is not None:
         return hit[1]
@@ -588,7 +685,8 @@ def _segment_jit(agg: Aggregate, ops, G: int, finalize: bool, schema):
 
     def go_segment(columns, valid, bgids):
         states = segment_fold(lambda _s: agg, dummy_states, ops,
-                              columns, valid, bgids, G)
+                              columns, valid, bgids, G,
+                              agg=agg, kernel_impl=seg_impl)
         return group_final(states)
 
     fn = jax.jit(go_segment)
@@ -699,16 +797,19 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
 
         if mesh is None:
             cols_a, valid_a, bgids = view.aligned_blocks(bs, pmask)
+            seg_impl = _resolve_segment_kernel(agg, cols_a, valid_a,
+                                               bgids, G)
             if jit:
                 schema = tuple(sorted(
                     (k, str(v.dtype), tuple(v.shape[1:]))
                     for k, v in data.items()))
-                return _segment_jit(agg, ops, G, finalize, schema)(
-                    cols_a, valid_a, bgids)
+                return _segment_jit(agg, ops, G, finalize, schema,
+                                    seg_impl)(cols_a, valid_a, bgids)
 
             def go_segment(columns, valid, bgids):
                 states = segment_fold(lambda _s: agg, dummy_states, ops,
-                                      columns, valid, bgids, G)
+                                      columns, valid, bgids, G,
+                                      agg=agg, kernel_impl=seg_impl)
                 return group_final(states)
 
             return go_segment(cols_a, valid_a, bgids)
@@ -717,12 +818,22 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
         # group-aligned blocks, per-group partials merge leaf-wise.
         cols_a, valid_a, bgids = view.sharded_blocks(mesh, row_axes, bs,
                                                      pmask)
+        # kernel resolution sees the SHARD-LOCAL shapes the kernel will
+        # run on inside shard_map (sharded_blocks pads every segment to
+        # whole blocks, so the division is exact)
+        segs = _mesh_segments(mesh, row_axes)
+        _local = lambda v: jax.ShapeDtypeStruct(
+            (v.shape[0] // segs,) + v.shape[1:], v.dtype)
+        seg_impl = _resolve_segment_kernel(
+            agg, jax.tree.map(_local, dict(cols_a)), _local(valid_a),
+            _local(bgids), G)
         in_spec = jax.tree.map(
             lambda v: row_pspec(row_axes, v.ndim), cols_a)
 
         def shard_segment(columns, valid, bgids):
             states = segment_fold(lambda _s: agg, dummy_states, ops,
-                                  columns, valid, bgids, G)
+                                  columns, valid, bgids, G,
+                                  agg=agg, kernel_impl=seg_impl)
             merged = merge_group_states(agg, ops, states, row_axes)
             return group_final(merged)
 

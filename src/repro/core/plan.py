@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import calibration as _calibration
 from .aggregates import (
     Aggregate, _fused_for, probe_segment_ops, run_grouped, run_many,
     run_stream, segment_block_size,
@@ -226,6 +227,26 @@ class _Projected(Aggregate):
     def final(self, state):
         return self.agg.final(state)
 
+    # Kernel hook + calibration class forward to the wrapped aggregate,
+    # so projection never hides the grouped fast path or the planner's
+    # cost bucket; segment_kernel_args applies this member's projection,
+    # so the kernel reads the statement's (possibly renamed) columns.
+    @property
+    def segment_kernel(self):
+        return self.agg.segment_kernel
+
+    @property
+    def kernel_impl(self):
+        return self.agg.kernel_impl
+
+    @property
+    def cost_class(self):
+        return self.agg.cost_class
+
+    def segment_kernel_args(self, columns, valid, block_gids, num_groups):
+        return self.agg.segment_kernel_args(self._project(columns), valid,
+                                            block_gids, num_groups)
+
 
 # Wrapper memo: planning the same statement again (a bench rep, a
 # repeated prepared batch) must yield the SAME projected-aggregate
@@ -253,8 +274,39 @@ def _member_agg(node) -> Aggregate:
 
 
 # ---------------------------------------------------------------------------
-# Cost model — rows moved per engine, the ranking behind engine selection.
+# Cost model — the ranking behind engine selection.  With an ACTIVE
+# measured calibration (see repro.core.calibration) candidates rank by
+# interpolated measured seconds; otherwise by the documented rows-moved
+# heuristics below, exactly as in the PR-5 planner.
 # ---------------------------------------------------------------------------
+
+_HEURISTIC = {"kind": "heuristic"}
+
+
+def _agg_cost_class(aggs) -> str:
+    """Calibration bucket of a (possibly fused) pass: the members' shared
+    ``cost_class`` when they agree, else the generic tables."""
+    classes = {getattr(a, "cost_class", "generic") for a in aggs}
+    return classes.pop() if len(classes) == 1 else "generic"
+
+
+def _measured_costs(cand_keys: Mapping[str, str], agg_cls: str, rows: int,
+                    groups: int | None = None):
+    """``(costs_in_seconds, source)`` from the active calibration, or
+    None unless EVERY candidate is covered — measured seconds must never
+    rank against heuristic row counts in one comparison."""
+    cal = _calibration.current()
+    if cal is None:
+        return None
+    costs = {}
+    for cand, key in cand_keys.items():
+        s = cal.engine_seconds(key, agg_cls, rows, groups)
+        if s is None:
+            return None
+        costs[cand] = s
+    return costs, {"kind": "measured", "backend": cal.backend,
+                   "timestamp": cal.timestamp}
+
 
 def _mesh_segments(mesh, row_axes) -> int:
     if mesh is None:
@@ -306,37 +358,53 @@ def _capable(engine: str, *, mask: bool = False, group_by: bool = False,
 
 
 def select_scan_engine(rows: int, mesh=None, row_axes=None, *,
-                       mask: bool = False,
-                       forced: str = "auto") -> tuple[str, dict[str, float]]:
+                       mask: bool = False, forced: str = "auto",
+                       agg_cls: str = "generic"
+                       ) -> tuple[str, dict[str, float], dict]:
     """Pick local vs sharded for a one-pass scan: candidates filtered
     through :data:`ENGINE_CAPS` by what the statement needs (``mask``),
-    ranked by the cost model.  Returns ``(engine, candidate_costs)``."""
+    ranked by measured seconds when an active calibration covers every
+    candidate (``agg_cls`` selects its bucket), else by the heuristic
+    cost model.  Returns ``(engine, candidate_costs, cost_source)``."""
     segs = _mesh_segments(mesh, row_axes)
     candidates = ["local"] + (["sharded"] if mesh is not None else [])
     costs = {e: scan_cost(e, rows, segs) for e in candidates
              if _capable(e, mask=mask)}
+    source = _HEURISTIC
+    measured = _measured_costs({e: e for e in costs}, agg_cls, rows)
+    if measured is not None:
+        costs, source = measured
     if forced != "auto":
         if forced not in ("local", "sharded"):
             raise ValueError(f"unknown scan engine {forced!r}")
         if forced == "sharded" and mesh is None:
             forced = "local"  # graceful degrade, like run_sharded itself
-        return forced, costs
-    return min(costs, key=lambda e: costs[e]), costs
+        return forced, costs, source
+    return min(costs, key=lambda e: costs[e]), costs, source
 
 
 def select_grouped_method(rows: int, groups: int, *, segment_ok: bool,
                           block_size: int | None = None, segs: int = 1,
-                          mask: bool = False, forced: str = "auto"
-                          ) -> tuple[str, dict[str, float]]:
+                          mask: bool = False, forced: str = "auto",
+                          agg_cls: str = "generic"
+                          ) -> tuple[str, dict[str, float], dict]:
     """Pick segment vs masked for a grouped pass: both candidates must
     clear the capability matrix (group_by + the statement's mask need);
     the generic-merge fallback (``segment_ok=False``) removes the
-    segment candidate."""
+    segment candidate.  Ranking prefers measured seconds (calibration
+    keys ``[sharded-]grouped-<method>``) when available, like
+    :func:`select_scan_engine`."""
     bs = segment_block_size(rows, groups, block_size)
     costs = {}
     for method in (("segment",) if segment_ok else ()) + ("masked",):
         if _capable(f"grouped-{method}", mask=mask, group_by=True):
             costs[method] = grouped_cost(method, rows, groups, bs, segs)
+    source = _HEURISTIC
+    prefix = "sharded-grouped-" if segs > 1 else "grouped-"
+    measured = _measured_costs({m: prefix + m for m in costs}, agg_cls,
+                               rows, groups)
+    if measured is not None:
+        costs, source = measured
     if forced != "auto":
         if forced == "segment" and not segment_ok:
             raise ValueError(
@@ -344,8 +412,8 @@ def select_grouped_method(rows: int, groups: int, *, segment_ok: bool,
                 "(agg.segment_ops() is None); use 'masked'")
         if forced not in ("segment", "masked"):
             raise ValueError(f"unknown grouped method {forced!r}")
-        return forced, costs
-    return min(costs, key=lambda m: costs[m]), costs
+        return forced, costs, source
+    return min(costs, key=lambda m: costs[m]), costs, source
 
 
 # ---------------------------------------------------------------------------
@@ -426,13 +494,13 @@ def fused_scan_pass(members: Sequence[tuple[int, ScanAgg]], *,
         raise ValueError("fused_scan_pass: members disagree on jit=")
 
     rows = base.table.n_rows
-    eng, costs = select_scan_engine(rows, base.table.mesh,
-                                    base.table.row_axes,
-                                    mask=base.mask is not None,
-                                    forced=base.engine if engine == "auto"
-                                    else engine)
     idx = [i for i, _ in members]
     aggs = [_member_agg(n) for n in nodes]
+    eng, costs, source = select_scan_engine(
+        rows, base.table.mesh, base.table.row_axes,
+        mask=base.mask is not None,
+        forced=base.engine if engine == "auto" else engine,
+        agg_cls=_agg_cost_class(aggs))
 
     def run():
         out = run_many(aggs, base.table, block_size=base.block_size,
@@ -443,7 +511,8 @@ def fused_scan_pass(members: Sequence[tuple[int, ScanAgg]], *,
         kind="scan", engine=eng, members=list(members),
         cost=costs[eng],
         info={"table": base.table, "rows": rows, "mask": base.mask,
-              "block_size": base.block_size, "costs": costs},
+              "block_size": base.block_size, "costs": costs,
+              "cost_source": source},
         run=run)
 
 
@@ -507,16 +576,18 @@ def fused_grouped_pass(members: Sequence[tuple[int, GroupedScanAgg]]
     # state, exactly as FusedAggregate.segment_ops declares).
     data_cols = dict(base_tbl.columns)
     data_cols.pop(base.group_col, None)
+    member_aggs = [_member_agg(n) for n in nodes]
     segment_ok = True
-    for n in nodes:
+    for a in member_aggs:
         try:
-            ok = probe_segment_ops(_member_agg(n), data_cols) is not None
+            ok = probe_segment_ops(a, data_cols) is not None
         except Exception:
             ok = False
         segment_ok = segment_ok and ok
-    method, costs = select_grouped_method(
+    method, costs, source = select_grouped_method(
         rows, groups, segment_ok=segment_ok, block_size=base.block_size,
-        segs=segs, mask=base.mask is not None, forced=base.method)
+        segs=segs, mask=base.mask is not None, forced=base.method,
+        agg_cls=_agg_cost_class(member_aggs))
 
     engine = ("sharded-grouped[%s]" % method) if mesh is not None \
         else f"grouped-{method}"
@@ -528,7 +599,7 @@ def fused_grouped_pass(members: Sequence[tuple[int, GroupedScanAgg]]
         if all(p is not None for p in projections):
             union = sorted({src for p in projections for src in p.values()})
             view = view.select(*union)
-        fused = _fused_for([_member_agg(n) for n in nodes])
+        fused = _fused_for(member_aggs)
         out = run_grouped(fused, view, block_size=base.block_size,
                           mask=base.mask, method=method, mesh=base.mesh,
                           row_axes=base.row_axes, jit=base.jit)
@@ -539,7 +610,7 @@ def fused_grouped_pass(members: Sequence[tuple[int, GroupedScanAgg]]
         cost=costs[method],
         info={"table": base_tbl, "group_col": base.group_col,
               "groups": groups, "rows": rows, "mask": base.mask,
-              "costs": costs,
+              "costs": costs, "cost_source": source,
               "view_key": (id(base_tbl), base.group_col)},
         run=run)
 
@@ -607,7 +678,8 @@ def _fit_pass(index: int, node: IterativeFit) -> PhysicalPass:
 
     return PhysicalPass(
         kind="fit", engine=engine, members=[(index, node)], cost=cost,
-        info=dict(info, rows=rows, max_iters=node.max_iters, tol=node.tol),
+        info=dict(info, rows=rows, max_iters=node.max_iters, tol=node.tol,
+                  cost_source=_HEURISTIC),
         run=run)
 
 
@@ -697,12 +769,16 @@ class PhysicalPlan:
             if info.get("block_size") is not None:
                 bits.append(f"block={info['block_size']}")
             if p.cost is not None:
+                src = info.get("cost_source") or _HEURISTIC
+                measured = src.get("kind") == "measured"
                 rejected = {e: c for e, c in info.get("costs", {}).items()
                             if c != p.cost}
-                bits.append(f"cost={int(p.cost)}")
+                bits.append(f"cost={_fmt_cost(p.cost, measured)}")
+                bits.append(f"[measured {src['backend']}@{src['timestamp']}]"
+                            if measured else "[heuristic]")
                 if rejected:
                     bits.append("(rejected: " + " ".join(
-                        f"{e}={int(c)}" for e, c in sorted(
+                        f"{e}={_fmt_cost(c, measured)}" for e, c in sorted(
                             rejected.items())) + ")")
             lines.append("  " + " ".join(bits))
             for i, n in p.members:
@@ -715,6 +791,14 @@ class PhysicalPlan:
 
 _KIND_NAMES = {"scan": "shared-scan", "grouped": "grouped-scan",
                "fit": "fit", "stream": "stream-scan"}
+
+
+def _fmt_cost(c: float, measured: bool) -> str:
+    """Heuristic costs are dimensionless row counts (integers); measured
+    costs are seconds and render with a unit."""
+    if not measured:
+        return str(int(c))
+    return f"{c:.2f}s" if c >= 1.0 else f"{c * 1e3:.2f}ms"
 
 
 def plan(statements: Sequence[Any]) -> PhysicalPlan:

@@ -29,8 +29,10 @@ from typing import Any, Iterator
 
 @dataclasses.dataclass
 class Event:
-    kind: str               # "scan" | "sort" | "fit" | "delta"
-    engine: str | None      # "local" / "sharded" / "grouped-segment" / ...
+    kind: str               # "scan" | "sort" | "fit" | "delta" | "kernel"
+    engine: str | None      # "local" / "sharded" / "grouped-segment" / ...;
+    # for kind="kernel" this is the RESOLVED implementation ("ref" /
+    # "pallas"), with detail carrying the kernel name and requested impl
     detail: dict[str, Any]
 
 
@@ -58,6 +60,12 @@ class Trace:
     @property
     def deltas(self) -> list[Event]:
         return self._kind("delta")
+
+    @property
+    def kernels(self) -> list[Event]:
+        """Kernel dispatch resolutions — one per physical execution that
+        consulted the registry; ``engine`` is the resolved impl."""
+        return self._kind("kernel")
 
 
 _ACTIVE: list[Trace] = []

@@ -1,0 +1,17 @@
+"""Segment-fold kernels — the grouped hot path as ONE fused Pallas loop.
+
+The partitioned grouped-scan core (:func:`repro.core.aggregates
+.segment_fold`) folds group-aligned row blocks and scatter-merges each
+block state into stacked ``(G, ...)`` per-group accumulators.  The
+kernels in this package fuse that whole fold — block transition AND
+segment-boundary merge — into a single Pallas grid loop: block gids ride
+in SMEM (scalar prefetch), the per-group accumulators persist in VMEM
+across the sequential TPU grid, and each step's MXU/VPU block update is
+accumulated straight into its group's slot.
+
+``ref.py`` holds the pure-jnp whole-fold oracles (bit-identical to the
+generic scan + scatter path for exact-state aggregates), ``kernel.py``
+the Pallas bodies, ``ops.py`` the padding/dispatch wrappers and the
+``supports`` gates.  Dispatched by name through ``kernels/registry.py``
+(``segment_linregr``, ``segment_countmin``, ``segment_fm``).
+"""

@@ -40,9 +40,18 @@ class LinregrAggregate(Aggregate):
     "ref" force an implementation."""
 
     merge_ops = MERGE_SUM
+    # grouped hot path: the whole segment fold as one fused Pallas grid
+    # loop (kernels/segment_fold), dispatched by name via the registry
+    segment_kernel = "segment_linregr"
+    # planner calibration bucket (measured cost tables key on this)
+    cost_class = "xtx"
 
     def __init__(self, use_kernel: bool | str = False):
         self.kernel_impl = resolve_impl(use_kernel)
+
+    def segment_kernel_args(self, columns, valid, block_gids, num_groups):
+        return ((columns["x"], columns["y"], valid, block_gids),
+                {"num_groups": num_groups})
 
     def init(self, block):
         d = block["x"].shape[-1]

@@ -52,12 +52,19 @@ class CountMinAggregate(Aggregate):
     """ε-δ frequency sketch: state (depth, width) int32 counters."""
 
     merge_ops = MERGE_SUM
+    segment_kernel = "segment_countmin"   # fused grouped fold (registry)
+    cost_class = "sketch"                 # planner calibration bucket
 
     def __init__(self, depth: int = 4, width: int = 1024,
                  use_kernel: bool | str = False, item_col: str = "item"):
         self.depth, self.width = depth, width
         self.kernel_impl = resolve_impl(use_kernel)
         self.item_col = item_col
+
+    def segment_kernel_args(self, columns, valid, block_gids, num_groups):
+        return ((columns[self.item_col], valid, block_gids),
+                {"depth": self.depth, "width": self.width,
+                 "num_groups": num_groups})
 
     def init(self, block):
         return jnp.zeros((self.depth, self.width), jnp.int32)
@@ -91,11 +98,19 @@ class FMAggregate(Aggregate):
     """
 
     merge_ops = MERGE_MAX
+    segment_kernel = "segment_fm"         # fused grouped fold (registry)
+    cost_class = "sketch"                 # planner calibration bucket
 
     def __init__(self, num_hashes: int = 8, bits: int = 32,
-                 item_col: str = "item"):
+                 item_col: str = "item", use_kernel: bool | str = False):
         self.num_hashes, self.bits = num_hashes, bits
         self.item_col = item_col
+        self.kernel_impl = resolve_impl(use_kernel)
+
+    def segment_kernel_args(self, columns, valid, block_gids, num_groups):
+        return ((columns[self.item_col], valid, block_gids),
+                {"num_hashes": self.num_hashes, "bits": self.bits,
+                 "num_groups": num_groups})
 
     def init(self, block):
         return jnp.zeros((self.num_hashes, self.bits), jnp.int32)
@@ -150,6 +165,7 @@ def countmin_sketch_grouped(table: Table, key_col: str,
                             depth: int = 4, width: int = 1024,
                             item_col: str = "item",
                             block_size: int | None = None,
+                            use_kernel: bool | str = False,
                             mesh=None) -> jax.Array:
     """One Count-Min sketch per group (``GROUP BY`` frequency sketching):
     a ``(num_groups, depth, width)`` counter stack from one partitioned
@@ -160,7 +176,8 @@ def countmin_sketch_grouped(table: Table, key_col: str,
     projection, so batched grouped statements share one partitioning
     sort through the ``group_by`` memo."""
     return execute(GroupedScanAgg(
-        CountMinAggregate(depth, width, item_col=item_col), table, key_col,
+        CountMinAggregate(depth, width, use_kernel=use_kernel,
+                          item_col=item_col), table, key_col,
         num_groups, columns=(item_col,), block_size=block_size, mesh=mesh,
         label="countmin_grouped"))
 
@@ -170,12 +187,14 @@ def fm_distinct_count_grouped(table: Table, key_col: str,
                               num_hashes: int = 8, bits: int = 32,
                               item_col: str = "item",
                               block_size: int | None = None,
+                              use_kernel: bool | str = False,
                               mesh=None) -> jax.Array:
     """Per-group Flajolet-Martin distinct-count estimates
     (``SELECT g, count(DISTINCT item) GROUP BY g``, approximated): the
     max-merge bitmaps segment-fold in one grouped scan (sharded across
     ``mesh`` when given); returns a ``(num_groups,)`` estimate vector."""
     return execute(GroupedScanAgg(
-        FMAggregate(num_hashes, bits, item_col=item_col), table, key_col,
+        FMAggregate(num_hashes, bits, item_col=item_col,
+                    use_kernel=use_kernel), table, key_col,
         num_groups, columns=(item_col,), block_size=block_size, mesh=mesh,
         label="fm_grouped"))

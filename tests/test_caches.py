@@ -1,0 +1,137 @@
+"""Prepared-statement cache behavior.
+
+The engines memoize compiled programs static on the aggregate INSTANCE
+(``_LOCAL_JIT_CACHE``, ``_SEGMENT_JIT_CACHE``, ``_STREAM_JIT_CACHE``)
+and the plan layer memoizes fused/projected wrappers.  This file pins
+the lifecycle contracts those docstrings promise:
+
+* bounded FIFO — filling a cache past its max evicts the oldest entry,
+  and eviction actually DROPS the compiled program (weakref dies after
+  gc), so one-shot aggregates cannot accumulate executables;
+* a live entry pins its aggregate, so ``id()`` keys cannot be reused by
+  new objects while the entry lives;
+* a cache hit after ``Table.append`` (same epoch — rows grew, existing
+  rows untouched) stays CORRECT: the jit object retraces on the new
+  shapes, the cached entry is reused, and results match a fresh
+  aggregate's.
+"""
+
+import gc
+import weakref
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Table, run_grouped, run_local
+from repro.core import aggregates as agg_mod
+from repro.methods.sketches import CountMinAggregate
+
+G = 3
+
+
+def _table(n=96, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_columns({
+        "item": jnp.asarray(rng.integers(0, 50, n).astype(np.int32)),
+        "g": jnp.asarray((np.arange(n) % G).astype(np.int32)),
+    })
+
+
+def _fresh(depth=4, width=128, **kw):
+    return CountMinAggregate(depth, width, **kw)
+
+
+@pytest.fixture(autouse=True)
+def _clean_caches():
+    agg_mod._SEGMENT_JIT_CACHE.clear()
+    agg_mod._LOCAL_JIT_CACHE.clear()
+    yield
+    agg_mod._SEGMENT_JIT_CACHE.clear()
+    agg_mod._LOCAL_JIT_CACHE.clear()
+
+
+def test_segment_jit_cache_hit_and_fifo_eviction(monkeypatch):
+    monkeypatch.setattr(agg_mod, "_SEGMENT_JIT_MAX", 2)
+    tbl = _table()
+    a0 = _fresh()
+    run_grouped(a0, tbl, "g", G)
+    assert len(agg_mod._SEGMENT_JIT_CACHE) == 1
+    key0, (pinned, fn0) = next(iter(agg_mod._SEGMENT_JIT_CACHE.items()))
+    assert pinned is a0                     # live entry pins its aggregate
+    run_grouped(a0, tbl, "g", G)
+    assert agg_mod._SEGMENT_JIT_CACHE[key0][1] is fn0   # hit, not rebuild
+
+    dead = weakref.ref(fn0)
+    dead_agg = weakref.ref(a0)
+    # two more distinct aggregates evict the oldest entry (FIFO, max=2)
+    for seed in (1, 2):
+        run_grouped(_fresh(), tbl, "g", G)
+    assert len(agg_mod._SEGMENT_JIT_CACHE) == 2
+    assert key0 not in agg_mod._SEGMENT_JIT_CACHE
+    del a0, fn0, pinned
+    gc.collect()
+    # eviction dropped the compiled program AND released the aggregate
+    assert dead() is None
+    assert dead_agg() is None
+
+
+def test_segment_jit_key_includes_kernel_impl(recwarn):
+    """The same aggregate instance resolved to different kernel impls
+    must compile different programs (the kernel branch changes the
+    traced graph) — seg_impl is part of the cache key."""
+    tbl = _table()
+    a_ref = _fresh(use_kernel="ref")
+    a_none = _fresh()
+    run_grouped(a_ref, tbl, "g", G)
+    run_grouped(a_none, tbl, "g", G)
+    impls = {k[-1] for k in agg_mod._SEGMENT_JIT_CACHE}
+    assert impls == {"ref", None}
+
+
+def test_segment_cache_hit_after_append_same_epoch_stays_correct():
+    tbl = _table()
+    agg = _fresh()
+    before = run_grouped(agg, tbl, "g", G)
+    assert np.asarray(before).shape == (G, 4, 128)
+    (key, _), = agg_mod._SEGMENT_JIT_CACHE.items()
+    epoch = tbl.epoch
+
+    rng = np.random.default_rng(7)
+    tbl.append({"item": jnp.asarray(rng.integers(0, 50, 33).astype(np.int32)),
+                "g": jnp.asarray(rng.integers(0, G, 33).astype(np.int32))})
+    assert tbl.epoch == epoch               # append-only: same epoch
+
+    after = run_grouped(agg, tbl, "g", G)   # same instance -> cache hit
+    assert key in agg_mod._SEGMENT_JIT_CACHE
+    fresh = run_grouped(_fresh(), tbl, "g", G)
+    np.testing.assert_array_equal(np.asarray(after), np.asarray(fresh))
+    assert int(np.asarray(after).sum()) > int(np.asarray(before).sum())
+
+
+def test_local_jit_cache_fifo_and_weakref(monkeypatch):
+    monkeypatch.setattr(agg_mod, "_LOCAL_JIT_MAX", 2)
+    tbl = _table()
+    a0 = _fresh()
+    run_local(a0, tbl, block_size=32)
+    (key0, (pinned, fn0)), = agg_mod._LOCAL_JIT_CACHE.items()
+    assert pinned is a0
+    dead = weakref.ref(fn0)
+    for _ in range(2):
+        run_local(_fresh(), tbl, block_size=32)
+    assert key0 not in agg_mod._LOCAL_JIT_CACHE
+    assert len(agg_mod._LOCAL_JIT_CACHE) == 2
+    del a0, fn0, pinned
+    gc.collect()
+    assert dead() is None
+
+
+def test_local_cache_hit_after_append_same_epoch_stays_correct():
+    tbl = _table(seed=5)
+    agg = _fresh()
+    run_local(agg, tbl)
+    tbl.append({"item": jnp.asarray(np.arange(17, dtype=np.int32)),
+                "g": jnp.asarray((np.arange(17) % G).astype(np.int32))})
+    after = run_local(agg, tbl)             # cached program, new shapes
+    fresh = run_local(_fresh(), tbl)
+    np.testing.assert_array_equal(np.asarray(after), np.asarray(fresh))

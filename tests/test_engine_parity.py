@@ -17,6 +17,7 @@ each engine implements differently — from the shared ``final`` math
 the grouped oracle tests).
 """
 
+import warnings
 import zlib
 
 import jax
@@ -169,6 +170,65 @@ def test_engine_parity_matrix(name, pattern, mesh1):
     for engine, kw in grouped_runs.items():
         got = run_grouped(_RawState(make_agg()), tbl, "g", G, **kw)
         _assert_leaves(got, ref, exact, f"{engine} {name}/{pattern} {draw}")
+
+
+# -- segment-fold kernel parity -----------------------------------------------
+#
+# The registered Pallas segment-fold kernels (kernels/segment_fold) must
+# be BIT-identical to the generic jnp segment fold on every grouped
+# engine.  Off-TPU (CI) the forced "pallas" impl runs the kernel BODY in
+# interpret mode — same arithmetic, same guarantee.
+
+KERNEL_CASES = {
+    "linregr": (_linregr_cols,
+                lambda uk: LinregrAggregate(use_kernel=uk)),
+    "countmin": (_item_cols,
+                 lambda uk: CountMinAggregate(4, 128, use_kernel=uk)),
+    "fm": (_item_cols,
+           lambda uk: FMAggregate(4, 16, use_kernel=uk)),
+}
+
+
+@pytest.mark.parametrize("pattern", ("empty", "skewed"))
+@pytest.mark.parametrize("name", sorted(KERNEL_CASES))
+@pytest.mark.parametrize("impl", ("ref", "pallas"))
+def test_segment_kernel_grouped_parity(name, pattern, impl, mesh1):
+    build, make = KERNEL_CASES[name]
+    draw = Draw(zlib.crc32(f"kern/{name}/{pattern}".encode()))
+    gids_np, _ = group_layout(draw, N, G, pattern)
+    cols = {k: jnp.asarray(v) for k, v in build(draw).items()}
+    tbl = Table.from_columns(dict(cols, g=jnp.asarray(gids_np)))
+    for kw in (dict(), dict(mesh=mesh1)):
+        base = run_grouped(make(False), tbl, "g", G, method="segment",
+                           finalize=False, **kw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # forced-pallas interpret note
+            got = run_grouped(make(impl), tbl, "g", G, method="segment",
+                              finalize=False, **kw)
+        _assert_leaves(got, base, True,
+                       f"kernel {name}/{pattern}/{impl} {kw} {draw}")
+
+
+@pytest.mark.parametrize("impl", ("ref", "pallas"))
+def test_fit_grouped_kernel_parity(impl, mesh1):
+    """The iterative grouped executor with kernel-routed transitions is
+    bit-identical to the inline jnp transitions, locally and sharded."""
+    from repro.core import fit_grouped
+    from repro.methods.linregr import LinregrTask
+    draw = Draw(7)
+    gids_np, _ = group_layout(draw, N, G, "skewed")
+    tbl = Table.from_columns({"x": jnp.asarray(draw.dyadic((N, 3))),
+                              "y": jnp.asarray(draw.dyadic((N,))),
+                              "g": jnp.asarray(gids_np)})
+    for kw in (dict(), dict(mesh=mesh1)):
+        base = fit_grouped(LinregrTask(), tbl, "g", G, max_iters=1,
+                           tol=None, **kw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got = fit_grouped(LinregrTask(use_kernel=impl), tbl, "g", G,
+                              max_iters=1, tol=None, **kw)
+        _assert_leaves(got.result.coef, base.result.coef, True,
+                       f"fit_grouped kernel {impl} {kw}")
 
 
 def test_final_results_ride_the_states(mesh1):

@@ -50,7 +50,7 @@ def test_registry_unknown_kernel_and_duplicate():
     # explicit overwrite is allowed and undone to keep the session clean
     orig = registry.get("xtx")
     registry.register("xtx", ref=orig.ref, pallas=orig.pallas,
-                      overwrite=True)
+                      supports=orig.supports, overwrite=True)
 
 
 def test_registry_resolve_impl():

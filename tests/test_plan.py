@@ -65,24 +65,27 @@ class _FakeMesh:
 
 
 def test_select_scan_engine_cost_based():
-    eng, costs = select_scan_engine(100_000, mesh=None)
+    eng, costs, src = select_scan_engine(100_000, mesh=None)
     assert eng == "local" and set(costs) == {"local"}
+    assert src == {"kind": "heuristic"}  # no calibration active
     # >1 segment: the two-phase sharded plan is strictly cheaper
-    eng, costs = select_scan_engine(100_000, mesh=_FakeMesh(4))
+    eng, costs, _ = select_scan_engine(100_000, mesh=_FakeMesh(4))
     assert eng == "sharded"
     assert costs["sharded"] < costs["local"]
     # degenerate 1-segment mesh: tie breaks to the local fold
-    eng, _ = select_scan_engine(100_000, mesh=_FakeMesh(1))
+    eng, _, _ = select_scan_engine(100_000, mesh=_FakeMesh(1))
     assert eng == "local"
     # forced engine is honored, not re-derived
-    eng, _ = select_scan_engine(100_000, mesh=_FakeMesh(4), forced="local")
+    eng, _, _ = select_scan_engine(100_000, mesh=_FakeMesh(4),
+                                   forced="local")
     assert eng == "local"
 
 
 def test_select_grouped_method_cost_based():
-    m, costs = select_grouped_method(100_000, 64, segment_ok=True)
+    m, costs, src = select_grouped_method(100_000, 64, segment_ok=True)
     assert m == "segment" and costs["segment"] < costs["masked"]
-    m, costs = select_grouped_method(100_000, 64, segment_ok=False)
+    assert src == {"kind": "heuristic"}
+    m, costs, _ = select_grouped_method(100_000, 64, segment_ok=False)
     assert m == "masked" and "segment" not in costs
     with pytest.raises(ValueError, match="segment"):
         select_grouped_method(100_000, 64, segment_ok=False,
@@ -285,12 +288,12 @@ def test_explain_golden_fused_batch(table):
                       columns=("item",))
     assert sess.explain() == (
         "plan: 5 statements -> 2 passes, 1 sort\n"
-        "  pass 0: shared-scan [local] t0 rows=512 cost=512\n"
+        "  pass 0: shared-scan [local] t0 rows=512 cost=512 [heuristic]\n"
         "    s0: CountMinAggregate\n"
         "    s1: FMAggregate\n"
         "    s2: HistogramAggregate\n"
         "  pass 1: grouped-scan [grouped-segment] t0 by g groups=4 "
-        "sort=v0 rows=512 cost=1024 (rejected: masked=2048)\n"
+        "sort=v0 rows=512 cost=1024 [heuristic] (rejected: masked=2048)\n"
         "    s3: CountMinAggregate\n"
         "    s4: FMAggregate"
     )
@@ -310,12 +313,92 @@ def test_explain_golden_masked_and_fit(table, key):
     assert sess.explain() == (
         "plan: 3 statements -> 3 passes, 1 sort\n"
         "  pass 0: shared-scan [local] t0 rows=512 mask=yes block=128 "
-        "cost=512\n"
+        "cost=512 [heuristic]\n"
         "    s0: HistogramAggregate\n"
         "  pass 1: grouped-scan [grouped-masked] t0 by g groups=4 "
-        "sort=v0 rows=512 cost=2048 (rejected: segment=1024)\n"
+        "sort=v0 rows=512 cost=2048 [heuristic] (rejected: segment=1024)\n"
         "    s1: CountMinAggregate\n"
         "  pass 2: fit [local] t1 rows=512 max_iters=5 tol=0.0001 "
-        "cost=2560\n"
+        "cost=2560 [heuristic]\n"
         "    irls: IRLSTask"
     )
+
+
+# -- measured calibration -> planner costs ------------------------------------
+
+def _cal(engines, **kw):
+    from repro.core.calibration import Calibration
+    return Calibration(backend="cpu", timestamp="2026-08-07T00:00:00",
+                       engines=engines, kernels=kw.get("kernels", {}),
+                       grouped_block=kw.get("grouped_block", []))
+
+
+def test_calibration_flips_grouped_choice_and_explain(table):
+    """An active calibration whose measurements contradict the heuristic
+    must drive BOTH the selection and the explain() annotation; without
+    activation the PR-5 heuristic behavior is unchanged."""
+    from repro.core import calibration
+    cal = _cal({
+        "grouped-segment": {"sketch": [
+            {"rows": 512, "groups": 4, "seconds": 2.0e-3}]},
+        "grouped-masked": {"sketch": [
+            {"rows": 512, "groups": 4, "seconds": 5.0e-4}]},
+    })
+    sess = Session()
+    sess.grouped_scan(_cm(), table, "g", num_groups=GROUPS,
+                      columns=("item",))
+    with calibration.use(cal):
+        txt = sess.explain()
+    assert "[grouped-masked]" in txt, txt       # measured ranking wins
+    assert "[measured cpu@2026-08-07T00:00:00]" in txt
+    assert "cost=0.50ms" in txt and "segment=2.00ms" in txt
+    # calibration file on disk but NOT activated: heuristics, unchanged
+    txt2 = sess.explain()
+    assert "[grouped-segment]" in txt2 and "[heuristic]" in txt2
+    assert "cost=1024" in txt2
+
+
+def test_calibration_partial_coverage_falls_back(table):
+    """Measured seconds never rank against heuristic row counts: a
+    calibration missing ANY candidate leaves the whole selection on the
+    heuristic model."""
+    from repro.core import calibration
+    cal = _cal({"grouped-masked": {"generic": [
+        {"rows": 512, "groups": 4, "seconds": 1e-6}]}})  # no segment entry
+    with calibration.use(cal):
+        m, costs, src = select_grouped_method(512, 4, segment_ok=True)
+    assert m == "segment" and src == {"kind": "heuristic"}
+    assert costs["segment"] == 1024
+
+
+def test_calibration_bucket_interpolation():
+    from repro.core.calibration import Calibration
+    cal = Calibration(
+        backend="cpu", timestamp="t", kernels={}, grouped_block=[
+            {"rows": 1024, "groups": 4, "block": 256},
+            {"rows": 1 << 20, "groups": 4, "block": 4096}],
+        engines={"local": {"generic": [
+            {"rows": 1000, "seconds": 1.0},
+            {"rows": 1_000_000, "seconds": 50.0}]}})
+    # nearest log2 bucket, linearly scaled in rows
+    assert cal.engine_seconds("local", "generic", 2000) == 2.0
+    assert cal.engine_seconds("local", "generic", 500_000) == 25.0
+    # class fallback: unmeasured class uses the generic tables
+    assert cal.engine_seconds("local", "xtx", 1000) == 1.0
+    assert cal.engine_seconds("sharded", "generic", 1000) is None
+    # measured-best grouped block per shape bucket
+    assert cal.grouped_block_size(2048, 4) == 256
+    assert cal.grouped_block_size(1 << 19, 4) == 4096
+
+
+def test_calibration_drives_segment_block_size():
+    from repro.core import calibration
+    from repro.core.aggregates import segment_block_size
+    heur = segment_block_size(10_000, 10)
+    cal = _cal({}, grouped_block=[{"rows": 10_000, "groups": 10,
+                                   "block": 512}])
+    with calibration.use(cal):
+        assert segment_block_size(10_000, 10) == 512
+        # explicit block_size still wins over the measurement
+        assert segment_block_size(10_000, 10, 64) == 64
+    assert segment_block_size(10_000, 10) == heur
