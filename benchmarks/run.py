@@ -11,6 +11,8 @@
 #                        optimizer) vs naive per-statement execution
 #   bench_ivm         — §4.1 merge combinators as incremental view
 #                        maintenance: delta-fold refresh vs full rescan
+#   bench_serve       — §3.2 serving: cross-session admission-window
+#                        scan sharing + version-keyed result caching
 #   bench_sgd_models  — Table 2 (six models, one SGD abstraction)
 #   bench_text        — Table 3 (feature extraction, Viterbi, MCMC,
 #                        q-gram matching)
@@ -25,7 +27,8 @@ import traceback
 
 def main() -> None:
     from . import bench_ivm, bench_linregr, bench_iterative, \
-        bench_plan, bench_profile, bench_sgd_models, bench_text, roofline
+        bench_plan, bench_profile, bench_serve, bench_sgd_models, \
+        bench_text, roofline
 
     suites = [
         ("bench_linregr", bench_linregr.run),
@@ -33,6 +36,7 @@ def main() -> None:
         ("bench_profile", bench_profile.run),
         ("bench_plan", bench_plan.run),
         ("bench_ivm", bench_ivm.run),
+        ("bench_serve", bench_serve.run),
         ("bench_sgd_models", bench_sgd_models.run),
         ("bench_text", bench_text.run),
         ("roofline", roofline.run),

@@ -13,6 +13,11 @@ statements become *living views* (:func:`materialize` /
 version and fold state, and appends (``Table.append``) refresh by
 delta-folding only the new rows with the aggregates' own merge
 combinators — bit-identical to a rescan for exact-state aggregates.
+:class:`AnalyticsServer` (:mod:`repro.core.server`) lifts all of this
+across *sessions*: many ``Session(server=...)`` submitters share one
+admission window, compatible statements from different analysts fuse
+into ONE physical pass, identical statements deduplicate, and a
+version-keyed result cache answers repeats with zero scans.
 
 - Table          — sharded pytree-of-columns (macro-programming substrate)
 - Aggregate      — the (init, transition, merge, final) UDA pattern
@@ -159,6 +164,7 @@ from .plan import (
     plan,
 )
 from .materialize import MaterializedHandle, materialize
+from .server import AnalyticsServer, ServerHandle
 from .session import Handle, Session
 from .trace import Trace, trace_execution
 
@@ -167,6 +173,7 @@ __all__ = [
     "StreamAgg", "PhysicalPlan", "plan", "execute", "explain",
     "Session", "Handle", "Trace", "trace_execution",
     "MaterializedHandle", "materialize",
+    "AnalyticsServer", "ServerHandle",
     "Table", "GroupedView", "Aggregate", "FusedAggregate", "MERGE_SUM",
     "MERGE_MAX", "MERGE_MIN",
     "run_local", "run_sharded", "run_stream", "run_grouped", "run_many",

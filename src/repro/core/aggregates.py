@@ -106,6 +106,19 @@ class Aggregate:
         return _kernels.dispatch(self.segment_kernel, *args, impl=impl,
                                  _record=False, **kwargs)
 
+    # -- result-cache identity ----------------------------------------------
+    def cache_key(self):
+        """Semantic identity of this aggregate for cross-submitter result
+        caching (the analytics server): a hashable value that is equal for
+        two instances iff they compute the same function of their input —
+        i.e. identical finalized results on identical rows.  ``None`` (the
+        default) opts out: the statement always executes.  Aggregates
+        whose behavior is fully determined by constructor parameters
+        should return ``(class tag, *params)``; anything carrying arrays
+        or closures in its configuration must stay ``None`` (array-valued
+        params have no cheap hashable identity)."""
+        return None
+
     # -- to implement --------------------------------------------------------
     def init(self, block: Columns) -> S:  # block may hold tracers; use shapes only
         raise NotImplementedError

@@ -29,6 +29,13 @@ have grown ``G``).
 Statements with a base ``mask`` are rejected loudly: a row filter is
 row-aligned with one table version and cannot describe rows that did not
 exist when it was built — filter into a derived table instead.
+
+Living views also serve as **cache fillers** for the analytics server
+(:meth:`repro.core.server.AnalyticsServer.register_view`, automatic via
+``Session.materialize`` on a server-attached session): a submitted
+statement whose semantic fingerprint matches a registered view is
+answered from the view's retained fold state — delta-refreshed across
+appends, still zero scans — instead of re-executing.
 """
 
 from __future__ import annotations

@@ -450,6 +450,47 @@ def statement_fingerprint(node) -> tuple:
                     f"statement: {node!r}")
 
 
+def semantic_fingerprint(node) -> tuple | None:
+    """Cross-submitter identity of a statement's RESULT — the analytics
+    server's cache key component (:mod:`repro.core.server`).
+
+    Unlike :func:`statement_fingerprint` (which keys on aggregate object
+    *identity* — right for a retained handle that owns its instances),
+    this keys on the aggregate's :meth:`~Aggregate.cache_key`, so the
+    same logical statement issued by two different sessions — each with
+    its own freshly constructed aggregate — maps to ONE fingerprint.  Two
+    statements share a semantic fingerprint iff executing either against
+    the same (table id, table version) yields identical finalized
+    results: same aggregate semantics, projection, grouping, block
+    partitioning and engine knobs.  The table itself is NOT part of the
+    fingerprint; the server keys its cache by
+    ``(table id, table version, fingerprint)``.
+
+    Returns ``None`` — never cache, always execute — when the statement
+    cannot be identified semantically: an aggregate without a
+    ``cache_key``, a masked statement (masks are session-local arrays,
+    identity-keyed), a prebuilt :class:`GroupedView` (a snapshot with no
+    version to track), or a non-scan statement (fits and streams hold no
+    cacheable table-version-addressed result).
+    """
+    if not isinstance(node, (ScanAgg, GroupedScanAgg)):
+        return None
+    agg_key = node.agg.cache_key()
+    if agg_key is None or node.mask is not None:
+        return None
+    proj = _normalize_projection(node.columns)
+    proj_key = None if proj is None else tuple(sorted(proj.items()))
+    if isinstance(node, ScanAgg):
+        return ("scan", agg_key, proj_key, node.block_size, node.engine,
+                node.jit)
+    if isinstance(node.table, GroupedView):
+        return None
+    return ("grouped", agg_key, proj_key, node.group_col, node.num_groups,
+            node.block_size, node.method,
+            id(node.mesh) if node.mesh is not None else None,
+            tuple(node.row_axes) if node.row_axes else None, node.jit)
+
+
 @dataclasses.dataclass
 class PhysicalPass:
     """One physical engine execution covering >= 1 statements."""

@@ -1,0 +1,430 @@
+"""Analytics server — cross-session scan sharing behind an admission window.
+
+The PR-5 planner proves statement fusion works inside ONE analyst's
+batch; production is thousands of concurrent analysts hitting the same
+tables, where N users profiling a table should cost ONE fused scan.
+MADlib's premise (§2, §3.2) — analytics run *inside* the engine so
+concurrent submitters share the database's data movement — and Feng et
+al. / sql4ml's declarative argument make that sharing legal: logical
+statements can be re-grouped, fused, deduplicated and cached across
+submitters without changing their semantics.  This module points the
+existing planner at a statement *queue* instead of a batch:
+
+* :class:`AnalyticsServer` is the long-lived serving front-end.  Many
+  :class:`~repro.core.session.Session`\\ s (constructed with
+  ``Session(server=...)``) submit logical plan nodes; each submit
+  returns an async-style :class:`ServerHandle` immediately.
+* Submitted statements sit in a short **admission window** (flushed when
+  the pending count reaches ``window_size``, when ``window_timeout``
+  seconds have passed since the window opened, on an explicit
+  :meth:`flush`, or on demand when any handle's ``result()`` is read).
+  The drain plans *across* sessions with :func:`repro.core.plan.plan`
+  unchanged: compatible ``ScanAgg``\\ s over one (table, mask,
+  block size) fuse into ONE ``run_many`` pass and compatible grouped
+  statements into ONE ``run_grouped`` pass, regardless of which session
+  submitted them.  Results route back per-handle via each statement's
+  projection isolation, exactly as in a single-session batch.
+* Statements whose :func:`~repro.core.plan.semantic_fingerprint` match
+  within one window are **deduplicated**: the fold runs once and every
+  submitter's handle receives the same result — N identical profile
+  statements cost one member in one fused pass, not N.
+* In front of planning sits a **version-keyed result cache**:
+  ``(table id, table version, semantic fingerprint) -> finalized raw
+  result``.  A repeated statement against an unchanged table is answered
+  with ZERO scans, bit-identical for exact-state aggregates by the same
+  argument as delta folds (it IS the previously computed state).  The
+  cache is probed at window-drain time — never at admission — so a table
+  mutated between admission and execution can never satisfy a stale
+  entry: ``Table.append`` / ``invalidate`` bump the version (missing
+  every old key) AND fire the table's mutation hooks, which evict the
+  dead entries eagerly.
+* Materialized living views (:func:`repro.core.materialize.materialize`)
+  **register as cache fillers** (:meth:`register_view`): a statement
+  matching a registered view's fingerprint is answered from the view's
+  retained fold state — refreshed by a delta fold when the table has
+  only appended, still zero scans — and the finalized result is pushed
+  into the cache at the current version.
+
+Observability: every drain records a ``kind="admission"`` trace event
+(window size, statements planned after dedup/cache, physical passes,
+``scans_saved``) and every cache answer a ``kind="cache_hit"`` event, so
+tests and benches assert sharing instead of timing it
+(:meth:`repro.core.trace.Trace.summary`).
+
+Thread safety: submits, flushes and reads may come from any thread (the
+bench drives 8 submitter threads); one re-entrant lock serializes window
+state and execution.  Mutating a table concurrently with a flush that
+scans it is the caller's race, exactly as with direct engine calls — the
+server only guarantees it will never *cache* across such a mutation (the
+fill re-checks the version after execution).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .plan import GroupedScanAgg, ScanAgg, plan, semantic_fingerprint
+from .table import GroupedView, Table
+from .trace import record as _record
+
+__all__ = ["AnalyticsServer", "ServerHandle"]
+
+_UNSET = object()
+_MISS = object()
+
+
+class ServerHandle:
+    """Async-style result of one submitted statement.
+
+    Returned immediately by :meth:`AnalyticsServer.submit`;
+    :meth:`result` drains the admission window on demand if the
+    statement is still pending, then blocks (``timeout`` seconds at
+    most) until the value is routed back.  Handles are resolved exactly
+    once; repeated reads return the same value.
+    """
+
+    def __init__(self, label: str, server: "AnalyticsServer"):
+        self.label = label
+        self._server = server
+        self._event = threading.Event()
+        self._value: Any = _UNSET
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _resolve(self, value: Any) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def result(self, timeout: float | None = None) -> Any:
+        if not self._event.is_set():
+            # Demand execution: drain the window holding this statement.
+            # If another thread is mid-flush, flush() blocks on the
+            # server lock until it finishes, then drains any remainder —
+            # either way the event is set when our window has executed.
+            self._server.flush()
+            if not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"statement {self.label!r} still pending after "
+                    f"{timeout}s")
+        if self._error is not None:
+            raise RuntimeError(
+                f"statement {self.label!r} failed in its admission "
+                f"window") from self._error
+        return self._value
+
+
+@dataclass
+class _Pending:
+    """One admitted statement awaiting its window drain."""
+
+    node: Any                       # ScanAgg | GroupedScanAgg | fit | stream
+    post: Callable | None
+    handle: ServerHandle
+    fp: tuple | None                # semantic fingerprint (None = opaque)
+    table: Table | None             # base table (None for streams)
+
+
+def _node_table(node) -> Table | None:
+    t = getattr(node, "table", None)
+    if isinstance(t, GroupedView):
+        return t.table
+    return t if isinstance(t, Table) else None
+
+
+class AnalyticsServer:
+    """Long-lived cross-session statement service (see module docstring).
+
+    ``window_size`` — pending-statement count that auto-drains the
+    window; ``window_timeout`` — seconds after which the open window
+    drains at the next submit or :meth:`poll` (``None`` = count/demand
+    only); ``cache_entries`` — LRU bound on the result cache.
+
+    ``stats`` tallies lifetime counters (submitted / windows / planned /
+    deduped / cache_hits / view_hits / scans_saved / evicted) for
+    serving dashboards; per-execution assertions should use the trace
+    events instead.
+    """
+
+    def __init__(self, *, window_size: int = 32,
+                 window_timeout: float | None = None,
+                 cache_entries: int = 1024):
+        if window_size < 1:
+            raise ValueError("window_size must be >= 1")
+        self.window_size = int(window_size)
+        self.window_timeout = window_timeout
+        self.cache_entries = int(cache_entries)
+        self._lock = threading.RLock()
+        self._pending: list[_Pending] = []
+        self._window_opened: float | None = None
+        self._seq = 0
+        # (table id, table version, fingerprint) -> finalized raw result
+        self._cache: OrderedDict[tuple, Any] = OrderedDict()
+        # (table id, fingerprint) -> (MaterializedHandle, statement index)
+        self._views: dict[tuple, tuple] = {}
+        # strong refs to hooked tables: keeps id()s stable for cache keys
+        # and lets close() deregister the eviction hooks
+        self._hooked: dict[int, Table] = {}
+        self.stats = {"submitted": 0, "windows": 0, "planned": 0,
+                      "deduped": 0, "cache_hits": 0, "view_hits": 0,
+                      "scans_saved": 0, "evicted": 0}
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, node, *, post: Callable | None = None,
+               label: str | None = None) -> ServerHandle:
+        """Admit one logical plan node; returns its handle immediately.
+        The statement executes when its window drains (count threshold,
+        timeout, explicit :meth:`flush`, or a demanded ``result()``)."""
+        with self._lock:
+            name = label or getattr(node, "label", None) or f"q{self._seq}"
+            self._seq += 1
+            handle = ServerHandle(name, self)
+            table = _node_table(node)
+            fp = semantic_fingerprint(node)
+            if fp is not None and table is not None:
+                self._hook_table(table)
+            now = time.monotonic()
+            if not self._pending:
+                self._window_opened = now
+            self._pending.append(_Pending(node, post, handle, fp, table))
+            self.stats["submitted"] += 1
+            if (len(self._pending) >= self.window_size
+                    or (self.window_timeout is not None
+                        and now - self._window_opened
+                        >= self.window_timeout)):
+                self.flush()
+        return handle
+
+    def poll(self) -> int:
+        """Drain the window iff its timeout has expired (serving loops
+        call this between accepts); returns statements drained."""
+        with self._lock:
+            if (self._pending and self.window_timeout is not None
+                    and time.monotonic() - self._window_opened
+                    >= self.window_timeout):
+                return self.flush()
+        return 0
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- the drain ---------------------------------------------------------
+    def flush(self) -> int:
+        """Drain the admission window: answer what the cache (or a
+        registered view) can, dedup same-fingerprint statements, plan
+        the remainder as ONE cross-session batch, execute, route results
+        to their handles, and fill the cache.  Returns the number of
+        statements drained."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+            self._window_opened = None
+            if not batch:
+                return 0
+            self.stats["windows"] += 1
+
+            to_plan: list[_Pending] = []
+            rep_of: dict[tuple, int] = {}    # dedup key -> to_plan index
+            routes: list[tuple[_Pending, int]] = []
+            hits = deduped = 0
+            for p in batch:
+                if p.fp is not None and p.table is not None:
+                    tid = id(p.table)
+                    # version re-check happens HERE, at execute time: the
+                    # key carries the table's *current* version, so an
+                    # entry probed against a table mutated mid-window can
+                    # only miss — the statement replans below.
+                    val = self._answer(tid, p.table, p.fp)
+                    if val is not _MISS:
+                        hits += 1
+                        self._resolve(p, val)
+                        continue
+                    dkey = (tid, p.fp)
+                    if dkey in rep_of:
+                        deduped += 1
+                        self.stats["deduped"] += 1
+                        routes.append((p, rep_of[dkey]))
+                        continue
+                    rep_of[dkey] = len(to_plan)
+                routes.append((p, len(to_plan)))
+                to_plan.append(p)
+
+            # versions at plan time, for the post-execution cache fill
+            fill = [(j, p, id(p.table), p.table.version)
+                    for j, p in enumerate(to_plan)
+                    if p.fp is not None and p.table is not None]
+            n_scan_stmts = sum(
+                isinstance(p.node, (ScanAgg, GroupedScanAgg))
+                for p in batch)
+            try:
+                pl = plan([p.node for p in to_plan])
+                scan_passes = sum(1 for ps in pl.passes
+                                  if ps.kind in ("scan", "grouped"))
+                scans_saved = max(0, n_scan_stmts - scan_passes)
+                _record("admission", None, window=len(batch),
+                        planned=len(to_plan), deduped=deduped,
+                        cache_hits=hits, passes=len(pl.passes),
+                        scans_saved=scans_saved)
+                self.stats["planned"] += len(to_plan)
+                self.stats["scans_saved"] += scans_saved
+                results = pl.execute()
+            except BaseException as e:
+                for p, _ in routes:
+                    p.handle._fail(e)
+                raise
+            for j, p, tid, version in fill:
+                # fill only if the table did not move during execution —
+                # a mid-flight mutation makes the scanned rows ambiguous
+                if p.table.version == version:
+                    self._cache_put((tid, version, p.fp), results[j])
+            first_err = None
+            for p, j in routes:
+                err = self._resolve(p, results[j])
+                if first_err is None:
+                    first_err = err
+            if first_err is not None:
+                raise first_err
+            return len(batch)
+
+    def _resolve(self, p: _Pending, raw: Any) -> BaseException | None:
+        """Apply the submitter's post and settle the handle.  A failing
+        post fails ONLY its own handle (returned, not raised, so the
+        rest of the window still resolves)."""
+        try:
+            value = p.post(raw) if p.post is not None else raw
+        except BaseException as e:
+            p.handle._fail(e)
+            return e
+        p.handle._resolve(value)
+        return None
+
+    # -- the result cache --------------------------------------------------
+    def _answer(self, tid: int, table: Table, fp: tuple):
+        """Cache-or-view answer for (table @ current version, fp), or
+        ``_MISS``.  Records the ``cache_hit`` trace event on a hit."""
+        key = (tid, table.version, fp)
+        val = self._cache.get(key, _MISS)
+        source = "cache"
+        if val is _MISS:
+            view = self._views.get((tid, fp))
+            if view is None:
+                return _MISS
+            handle, idx = view
+            # refresh + finalize: appends delta-fold (kind="delta" in the
+            # trace — still zero scans), anything else rescans inside the
+            # handle; either way the answer is current and gets cached at
+            # the version the handle now pins.
+            vals = handle.result()
+            vals = vals if isinstance(vals, list) else [vals]
+            val = vals[idx]
+            self._cache_put((tid, table.version, fp), val)
+            source = "view"
+            self.stats["view_hits"] += 1
+        else:
+            self._cache.move_to_end(key)
+        self.stats["cache_hits"] += 1
+        _record("cache_hit", None, source=source,
+                table_version=table.version)
+        return val
+
+    def _cache_put(self, key: tuple, value: Any) -> None:
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_entries:
+            self._cache.popitem(last=False)
+
+    def _hook_table(self, table: Table) -> None:
+        tid = id(table)
+        if tid not in self._hooked:
+            table.on_mutation(self._evict)
+            self._hooked[tid] = table
+
+    def _evict(self, table: Table) -> None:
+        """Mutation hook: drop every cache entry for the mutated table.
+        (All of them are dead — the version just bumped, so no remaining
+        key can match a future probe.)"""
+        with self._lock:
+            tid = id(table)
+            dead = [k for k in self._cache if k[0] == tid]
+            for k in dead:
+                del self._cache[k]
+            self.stats["evicted"] += len(dead)
+
+    def register_view(self, handle) -> None:
+        """Register a :class:`~repro.core.materialize.MaterializedHandle`
+        as a cache filler: statements whose semantic fingerprint matches
+        one of the view's retained statements are answered from its fold
+        state (delta-refreshed across appends) instead of scanning.
+        ``Session.materialize`` on a server-attached session registers
+        automatically."""
+        with self._lock:
+            self._hook_table(handle.table)
+            for i, node in enumerate(handle.nodes):
+                fp = semantic_fingerprint(node)
+                if fp is not None:
+                    self._views[(id(handle.table), fp)] = (handle, i)
+
+    def clear_cache(self) -> None:
+        """Drop every cached result (registered views stay)."""
+        with self._lock:
+            self._cache.clear()
+
+    # -- introspection & lifecycle -----------------------------------------
+    def explain(self) -> str:
+        """Render what draining the current window WOULD do — cache
+        answers, dedup, and the cross-session physical plan — without
+        executing (the serving analogue of ``Session.explain``)."""
+        with self._lock:
+            if not self._pending:
+                return "(empty batch)"
+            hits = deduped = 0
+            seen: set = set()
+            uniq = []
+            for p in self._pending:
+                if p.fp is not None and p.table is not None:
+                    tid = id(p.table)
+                    if ((tid, p.table.version, p.fp) in self._cache
+                            or (tid, p.fp) in self._views):
+                        hits += 1
+                        continue
+                    dkey = (tid, p.fp)
+                    if dkey in seen:
+                        deduped += 1
+                        continue
+                    seen.add(dkey)
+                uniq.append(p.node)
+            head = (f"admission window: {len(self._pending)} submitted, "
+                    f"{hits} cache-answerable, {deduped} deduped -> "
+                    f"{len(uniq)} planned")
+            if not uniq:
+                return head
+            return head + "\n" + plan(uniq).explain()
+
+    def close(self) -> None:
+        """Drain the window, deregister every table eviction hook and
+        drop the cache/view registries.  The server object stays usable
+        (tables re-hook on the next submit), but ``close()`` is the
+        polite end of a serving run."""
+        with self._lock:
+            self.flush()
+            for t in self._hooked.values():
+                t.remove_mutation_hook(self._evict)
+            self._hooked.clear()
+            self._cache.clear()
+            self._views.clear()
+
+    def __enter__(self) -> "AnalyticsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -22,6 +22,14 @@ statements start a new one.  Statements with *data dependencies* (e.g.
 quantiles' range pass feeding its histogram pass) cannot share a batch;
 issue them across two ``run()`` rounds or use the eager method wrappers,
 which plan each statement individually.
+
+**Server mode.**  ``Session(server=an_analytics_server)`` swaps the
+private batch for the server's *cross-session* admission window
+(:mod:`repro.core.server`): every statement submits immediately and
+returns an async-style :class:`~repro.core.server.ServerHandle`; the
+server fuses/dedups/caches across ALL attached sessions, and
+``run()``/``handle.result()`` drain the shared window on demand.  The
+statement-issuing API is identical in both modes.
 """
 
 from __future__ import annotations
@@ -60,23 +68,54 @@ class Handle:
         return self._value
 
 
-class Session:
-    """Batches logical statements and runs them through the planner."""
+class _DerivedHandle:
+    """Lazy combination of several server handles (server-mode analogue
+    of the eagerly-resolved derived Handle): ``result()`` gathers every
+    part — draining the shared admission window on demand — and combines
+    once."""
 
-    def __init__(self):
+    def __init__(self, label: str, parts: list, combine: Callable):
+        self.label = label
+        self._parts = parts
+        self._combine = combine
+        self._value: Any = _UNSET
+
+    def done(self) -> bool:
+        return (self._value is not _UNSET
+                or all(p.done() for p in self._parts))
+
+    def result(self) -> Any:
+        if self._value is _UNSET:
+            self._value = self._combine([p.result() for p in self._parts])
+        return self._value
+
+
+class Session:
+    """Batches logical statements and runs them through the planner —
+    or, with ``server=``, submits them to a shared
+    :class:`~repro.core.server.AnalyticsServer` admission window."""
+
+    def __init__(self, server=None):
+        self.server = server
         self._nodes: list = []
         self._posts: list = []
-        self._handles: list[Handle] = []
-        self._derived: list[tuple[Handle, list[Handle], Callable]] = []
+        self._handles: list = []
+        self._derived: list = []
         self._materialized: list = []
         self.last_plan = None
 
     # -- generic statements ----------------------------------------------
     def statement(self, node, *, post: Callable | None = None) -> Handle:
         """Enqueue a prebuilt logical plan node; ``post`` (optional)
-        shapes the raw engine result into the handle's value."""
+        shapes the raw engine result into the handle's value.  In server
+        mode the node is submitted immediately and the returned handle
+        resolves when the server's window drains."""
         if node.label is None:
-            node.label = f"s{len(self._nodes)}"
+            node.label = f"s{len(self._handles)}"
+        if self.server is not None:
+            h = self.server.submit(node, post=post, label=node.label)
+            self._handles.append(h)
+            return h
         h = Handle(node.label)
         self._nodes.append(node)
         self._posts.append(post)
@@ -123,6 +162,10 @@ class Session:
         from .materialize import materialize as _materialize
         h = _materialize(nodes[0] if len(nodes) == 1 else list(nodes))
         self._materialized.append(h)
+        if self.server is not None:
+            # living views double as cache fillers: matching statements
+            # from ANY session are answered from the view's fold state
+            self.server.register_view(h)
         return h
 
     def refresh(self) -> list:
@@ -131,7 +174,11 @@ class Session:
         order."""
         return [h.result() for h in self._materialized]
 
-    def _derive(self, parts: list[Handle], combine: Callable) -> Handle:
+    def _derive(self, parts: list, combine: Callable):
+        if self.server is not None:
+            h = _DerivedHandle(f"d{len(self._derived)}", parts, combine)
+            self._derived.append(h)
+            return h
         h = Handle(f"d{len(self._derived)}")
         self._derived.append((h, parts, combine))
         return h
@@ -194,7 +241,13 @@ class Session:
 
     # -- planning & execution ----------------------------------------------
     def explain(self) -> str:
-        """Render the physical plan for the pending batch (no execution)."""
+        """Render the physical plan for the pending batch (no execution).
+        In server mode this renders the server's whole admission window —
+        the batch shared across every attached session."""
+        if self.server is not None:
+            return self.server.explain()
+        if not self._nodes:
+            return "(empty batch)"
         return plan(self._nodes).explain()
 
     def run(self) -> list:
@@ -202,7 +255,22 @@ class Session:
         returns the per-statement results in statement order.  The batch
         is consumed whether or not execution succeeds — a failed batch is
         discarded (its handles stay unresolved), it is never silently
-        re-planned alongside the next one."""
+        re-planned alongside the next one.  An empty batch returns
+        ``[]``.  In server mode this drains the shared admission window
+        and gathers this session's handles."""
+        if self.server is not None:
+            handles, self._handles = self._handles, []
+            derived, self._derived = self._derived, []
+            if not handles:
+                return []
+            self.server.flush()
+            out = [h.result() for h in handles]
+            for d in derived:
+                d.result()
+            return out
+        if not self._nodes:
+            self._derived = []
+            return []
         try:
             pl = plan(self._nodes)
             self.last_plan = pl

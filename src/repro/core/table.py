@@ -61,6 +61,14 @@ class Table:
     # then guaranteed unchanged.  Host-side, never part of the pytree.
     _version: int = dataclasses.field(default=0, repr=False, compare=False)
     _epoch: int = dataclasses.field(default=0, repr=False, compare=False)
+    # Mutation hooks (the eviction contract's push side): callables
+    # ``hook(table)`` invoked host-side after every version bump, so
+    # external caches keyed on this table (the analytics server's result
+    # cache) evict eagerly instead of waiting to observe a version
+    # mismatch.  Host-side state, never part of the pytree; derived
+    # tables start with no hooks.
+    _mutation_hooks: list = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -286,6 +294,7 @@ class Table:
         self.columns.clear()
         self.columns.update(cols)
         self._version += 1
+        self._notify_mutation()
         return self
 
     def invalidate(self) -> None:
@@ -300,6 +309,29 @@ class Table:
         self._gb_cache.clear()
         self._version += 1
         self._epoch += 1
+        self._notify_mutation()
+
+    def on_mutation(self, hook: Callable[["Table"], None]) -> None:
+        """Register ``hook(table)`` to run after every mutation that bumps
+        :attr:`version` (:meth:`append` and :meth:`invalidate`) — the
+        push-side of the staleness contract.  External version-keyed
+        caches (the analytics server's result cache) use this to evict
+        entries for this table the moment it moves, rather than holding
+        dead state until a probe notices the version mismatch.  Hooks run
+        host-side, synchronously, in registration order; deregister with
+        :meth:`remove_mutation_hook`."""
+        self._mutation_hooks.append(hook)
+
+    def remove_mutation_hook(self, hook: Callable[["Table"], None]) -> None:
+        """Deregister a :meth:`on_mutation` hook (no-op if absent)."""
+        try:
+            self._mutation_hooks.remove(hook)
+        except ValueError:
+            pass
+
+    def _notify_mutation(self) -> None:
+        for hook in list(self._mutation_hooks):
+            hook(self)
 
     def _group_by_uncached(self, key_col: str, num_groups: int | None
                            ) -> "GroupedView":

@@ -35,6 +35,12 @@ class ProfileAggregate(Aggregate):
     def __init__(self):
         self.merge_ops = None  # synthesized in init()
 
+    def cache_key(self):
+        # No constructor parameters: the result is a pure function of the
+        # input schema/rows, which the server's cache key already pins via
+        # (table id, table version, projection).
+        return ("profile",)
+
     def init(self, block: Columns):
         state, ops = {}, {}
         for name, col in block.items():

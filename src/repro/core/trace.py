@@ -18,6 +18,16 @@ function), so the counters see physical engine executions: a fused
 aggregates it folds, and a masked grouped pass is one event even though
 its cost is O(G·n) — the cost difference lives in ``explain()``, the
 event count in the trace.
+
+The analytics server (:mod:`repro.core.server`) adds two serving-side
+kinds so cross-session sharing is *asserted*, not timed:
+``kind="admission"`` — one event per drained admission window, with the
+window size, statements actually planned (after result-cache hits and
+same-fingerprint dedup), physical passes, and ``scans_saved`` (scan
+statements submitted minus scan passes executed); and
+``kind="cache_hit"`` — one event per statement answered from the
+version-keyed result cache (or a registered materialized view) without
+any scan.  :meth:`Trace.summary` rolls every kind up into counts.
 """
 
 from __future__ import annotations
@@ -30,6 +40,7 @@ from typing import Any, Iterator
 @dataclasses.dataclass
 class Event:
     kind: str               # "scan" | "sort" | "fit" | "delta" | "kernel"
+    #                       | "admission" | "cache_hit"
     engine: str | None      # "local" / "sharded" / "grouped-segment" / ...;
     # for kind="kernel" this is the RESOLVED implementation ("ref" /
     # "pallas"), with detail carrying the kernel name and requested impl
@@ -66,6 +77,33 @@ class Trace:
         """Kernel dispatch resolutions — one per physical execution that
         consulted the registry; ``engine`` is the resolved impl."""
         return self._kind("kernel")
+
+    @property
+    def admissions(self) -> list[Event]:
+        """Admission-window drains — one per :meth:`AnalyticsServer.flush`
+        that found pending statements; ``detail`` carries the window size,
+        planned/deduped/cache-hit statement counts and ``scans_saved``."""
+        return self._kind("admission")
+
+    @property
+    def cache_hits(self) -> list[Event]:
+        """Statements answered from the server's version-keyed result
+        cache (``detail["source"] == "cache"``) or a registered
+        materialized view (``"view"``) — zero physical scans either way."""
+        return self._kind("cache_hit")
+
+    def summary(self) -> dict:
+        """Counts per event kind, plus the admission windows' aggregate
+        sharing tallies (``scans_saved`` / ``deduped`` summed across
+        windows) — what benches and serving logs print."""
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        for field in ("scans_saved", "deduped"):
+            total = sum(e.detail.get(field, 0) for e in self._kind("admission"))
+            if total:
+                out[field] = total
+        return out
 
 
 _ACTIVE: list[Trace] = []

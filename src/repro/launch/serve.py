@@ -2,6 +2,11 @@
 
 Host-scale runnable (reduced configs); the production decode cells are
 exercised by dryrun.py with the sequence-sharded split-K layout.
+
+This is the LM-decode serving demo.  The *analytics* serving front-end —
+concurrent analyst sessions sharing scans through an
+:class:`~repro.core.AnalyticsServer` admission window — lives in
+:mod:`repro.launch.analytics_serve`.
 """
 
 from __future__ import annotations

@@ -49,6 +49,9 @@ class LinregrAggregate(Aggregate):
     def __init__(self, use_kernel: bool | str = False):
         self.kernel_impl = resolve_impl(use_kernel)
 
+    def cache_key(self):
+        return ("linregr", self.kernel_impl)
+
     def segment_kernel_args(self, columns, valid, block_gids, num_groups):
         return ((columns["x"], columns["y"], valid, block_gids),
                 {"num_groups": num_groups})

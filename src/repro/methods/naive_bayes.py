@@ -39,6 +39,9 @@ class NaiveBayesAggregate(Aggregate):
         self.num_classes = num_classes
         self.var_smoothing = var_smoothing
 
+    def cache_key(self):
+        return ("naive_bayes", self.num_classes, self.var_smoothing)
+
     def init(self, block):
         d = block["x"].shape[-1]
         c = self.num_classes

@@ -26,6 +26,9 @@ class HistogramAggregate(Aggregate):
         self.lo, self.hi, self.bins = float(lo), float(hi), bins
         self.value_col = value_col
 
+    def cache_key(self):
+        return ("histogram", self.lo, self.hi, self.bins, self.value_col)
+
     def init(self, block):
         return jnp.zeros((self.bins,), jnp.float32)
 

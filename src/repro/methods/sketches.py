@@ -61,6 +61,10 @@ class CountMinAggregate(Aggregate):
         self.kernel_impl = resolve_impl(use_kernel)
         self.item_col = item_col
 
+    def cache_key(self):
+        return ("countmin", self.depth, self.width, self.item_col,
+                self.kernel_impl)
+
     def segment_kernel_args(self, columns, valid, block_gids, num_groups):
         return ((columns[self.item_col], valid, block_gids),
                 {"depth": self.depth, "width": self.width,
@@ -106,6 +110,10 @@ class FMAggregate(Aggregate):
         self.num_hashes, self.bits = num_hashes, bits
         self.item_col = item_col
         self.kernel_impl = resolve_impl(use_kernel)
+
+    def cache_key(self):
+        return ("fm", self.num_hashes, self.bits, self.item_col,
+                self.kernel_impl)
 
     def segment_kernel_args(self, columns, valid, block_gids, num_groups):
         return ((columns[self.item_col], valid, block_gids),
