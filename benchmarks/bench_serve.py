@@ -22,10 +22,21 @@ guesses):
 * **mutation** — ``Table.append`` between rounds: eviction hooks drop
   the dead entries and the next round replans (scans back to one),
   results matching a fresh solo run over the grown table bitwise.
+* **isolation** — per-table admission windows under the BACKGROUND
+  drainer (``drain="thread"``): a deterministically slow statement on
+  table A (an eager transition that sleeps) executes while table B's
+  statements drain on their own worker.  Overlap and B's drain latency
+  come from the per-table ``admission`` trace events' monotonic
+  timestamps — never from wall-clock heuristics around the round.
 
-``--smoke`` asserts the structural claims (scans-per-statement <= 1/N
-submitters; cached rounds execute zero scans with bit-identical
-results) and is wired into CI with the JSON uploaded as an artifact;
+``--drain=thread`` runs the served/cached sections against a
+background-drainer server (submitters wait passively on their handles;
+the server's own thread fires the windows), measuring the production
+serving posture; the default ``demand`` drains on ``flush()`` as
+before.  ``--smoke`` asserts the structural claims
+(scans-per-statement <= 1/N submitters; cached rounds execute zero
+scans with bit-identical results; B's drains overlap A's slow
+statement) and is wired into CI with the JSON uploaded as an artifact;
 the full run also reports served-vs-solo statement throughput (the
 >=3x serving win on scan-dominated batches).
 """
@@ -37,12 +48,14 @@ import threading
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     AnalyticsServer, ProfileAggregate, ScanAgg, Session, Table, execute,
     trace_execution,
 )
+from repro.core.aggregates import MERGE_SUM, Aggregate
 from repro.methods.linregr import LinregrAggregate
 from repro.methods.sketches import CountMinAggregate, FMAggregate
 
@@ -84,15 +97,38 @@ def _bitwise_equal(a, b) -> bool:
         x.shape == y.shape and (x == y).all() for x, y in zip(fa, fb))
 
 
-def _served_round(server: AnalyticsServer, batches: list[list]) -> list:
+class _SleepAggregate(Aggregate):
+    """Deterministically slow scan: the transition sleeps on the host.
+    Run eagerly (``jit=False``, unblocked -> ONE Python-level call), the
+    sleep genuinely occupies the executing drain worker for
+    ``seconds`` — the isolation section's 'slow statement on table A'."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, seconds: float):
+        self.seconds = seconds
+
+    def init(self, block):
+        return jnp.zeros((), dtype=jnp.float32)
+
+    def transition(self, state, block, mask):
+        time.sleep(self.seconds)
+        return state + jnp.sum(jnp.where(mask, block["y"], 0.0))
+
+
+def _served_round(server: AnalyticsServer, batches: list[list],
+                  passive: bool = False) -> list:
     """All sessions submit concurrently into ONE window, then one drain;
-    returns every statement's result."""
+    returns every statement's result.  ``passive`` (the drain-thread
+    axis) waits on the handles instead of flushing — the server's own
+    drainer fires the window."""
     sessions = [Session(server=server) for _ in batches]
     out: list = [None] * len(batches)
+    handles: list = []
 
     def submit(i):
         for node in batches[i]:
-            sessions[i].statement(node)
+            handles.append(sessions[i].statement(node))
 
     threads = [threading.Thread(target=submit, args=(i,))
                for i in range(len(batches))]
@@ -100,7 +136,11 @@ def _served_round(server: AnalyticsServer, batches: list[list]) -> list:
         t.start()
     for t in threads:
         t.join()
-    server.flush()
+    if passive:
+        for h in handles:
+            assert h.wait(60), "background drainer never fired"
+    else:
+        server.flush()
     for i, s in enumerate(sessions):
         out[i] = s.run()       # window already drained; gathers handles
     return [r for batch in out for r in batch]
@@ -123,13 +163,14 @@ def _time_rounds(fn, reps: int):
 
 
 def bench(rows: int = 200_000, dims: int = 8, sessions: int = 8,
-          reps: int = 3, block_size: int = 4096) -> dict:
+          reps: int = 3, block_size: int = 4096,
+          drain: str = "demand") -> dict:
     cols = _columns(rows, dims)
     table = Table.from_columns(cols)
     n_stmts = sessions * 4
     out: dict = {"config": {"rows": rows, "dims": dims,
                             "sessions": sessions, "reps": reps,
-                            "block_size": block_size,
+                            "block_size": block_size, "drain": drain,
                             "statements": n_stmts}}
 
     # -- solo baseline: each session fuses ITS OWN batch, pays its own scan
@@ -150,13 +191,16 @@ def bench(rows: int = 200_000, dims: int = 8, sessions: int = 8,
                    "stmts_per_sec": n_stmts / solo_s}
 
     # -- served: one admission window across all sessions, cache cleared
-    server = AnalyticsServer(window_size=4 * n_stmts)
+    passive = drain == "thread"
+    server = AnalyticsServer(
+        window_size=4 * n_stmts, drain=drain,
+        window_timeout=0.01 if passive else None)
     served_batches = [_statements(table, block_size)
                       for _ in range(sessions)]
 
     def served_round():
         server.clear_cache()
-        return _served_round(server, served_batches)
+        return _served_round(server, served_batches, passive)
 
     served_s, served_scans = _time_rounds(served_round, reps)
     out["served"] = {"seconds": served_s, "scans": served_scans,
@@ -195,7 +239,52 @@ def bench(rows: int = 200_000, dims: int = 8, sessions: int = 8,
     }
     out["server_stats"] = dict(server.stats)
     server.close()
+
+    out["isolation"] = _isolation_section(rows, dims, block_size)
     return out
+
+
+def _isolation_section(rows: int, dims: int, block_size: int,
+                       slow_seconds: float = 0.5) -> dict:
+    """Per-table window isolation under the background drainer: while
+    table A's drain worker is stuck in a deterministically slow
+    statement, table B's statements drain on their own worker.  Overlap
+    and latency are read off the per-table ``admission`` trace events
+    (monotonic ``opened_at``/``drained_at``), plus one structural check:
+    every B handle resolved while A's was still pending."""
+    ta = Table.from_columns(_columns(max(rows // 4, 1000), dims))
+    tb = Table.from_columns(_columns(max(rows // 4, 1000), dims))
+    # warm compile caches so B's drain time measures serving, not XLA
+    _block_on([execute(n) for n in _statements(tb, block_size)])
+    srv = AnalyticsServer(window_size=1, drain="thread")
+    try:
+        with trace_execution() as t:
+            ha = srv.submit(ScanAgg(
+                _SleepAggregate(slow_seconds), ta, columns=("y",),
+                engine="local", jit=False, label="slow"))
+            time.sleep(0.05)            # let A's worker enter the sleep
+            s = Session(server=srv)
+            hbs = [s.statement(n) for n in _statements(tb, block_size)]
+            for h in hbs:
+                assert h.wait(60), "table B starved behind table A"
+            overlapped = not ha.done()  # B finished while A still ran
+            assert ha.wait(60)
+        a_evs = [e.detail for e in t.admissions
+                 if e.detail["table"] == id(ta)]
+        b_evs = [e.detail for e in t.admissions
+                 if e.detail["table"] == id(tb)]
+        return {
+            "slow_exec_seconds": slow_seconds,
+            "a_windows": len(a_evs),
+            "b_windows": len(b_evs),
+            "b_latency_max": max(e["latency"] for e in b_evs),
+            "b_last_drained_before_a_done": (
+                max(e["drained_at"] for e in b_evs)
+                < a_evs[0]["drained_at"] + slow_seconds),
+            "overlapped": overlapped,
+        }
+    finally:
+        srv.close()
 
 
 def check_smoke(doc: dict) -> None:
@@ -218,6 +307,17 @@ def check_smoke(doc: dict) -> None:
     assert mut["scans"] >= 1, "post-mutation round served stale cache"
     assert mut["bit_identical_to_fresh"], (
         "post-mutation results do not match a fresh run")
+    iso = doc["isolation"]
+    assert iso["overlapped"], (
+        "per-table isolation regressed: table B's statements waited out "
+        "table A's slow drain")
+    assert iso["b_last_drained_before_a_done"], (
+        "table B's drains were queued behind table A's slow statement "
+        "(admission timestamps)")
+    assert iso["b_latency_max"] < iso["slow_exec_seconds"], (
+        f"table B drain latency {iso['b_latency_max']:.3f}s approaches "
+        f"table A's {iso['slow_exec_seconds']}s execution — windows are "
+        "not isolated")
 
 
 def run(rows: int = 200_000, reps: int = 3):
@@ -247,6 +347,10 @@ if __name__ == "__main__":
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--block-size", type=int, default=4096)
+    ap.add_argument("--drain", choices=("demand", "thread"),
+                    default="demand",
+                    help="'thread' = served/cached sections run against "
+                         "the background drainer (passive submitters)")
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes + assert the structural claims")
     args = ap.parse_args()
@@ -254,7 +358,8 @@ if __name__ == "__main__":
         args.rows = min(args.rows, 20_000)
         args.reps = min(args.reps, 2)
     doc = bench(rows=args.rows, dims=args.dims, sessions=args.sessions,
-                reps=args.reps, block_size=args.block_size)
+                reps=args.reps, block_size=args.block_size,
+                drain=args.drain)
     if args.smoke:
         check_smoke(doc)
         doc["smoke"] = "ok"

@@ -40,6 +40,7 @@ appends, still zero scans — instead of re-executing.
 
 from __future__ import annotations
 
+import threading
 from typing import Any, Sequence
 
 import jax
@@ -61,9 +62,16 @@ class MaterializedHandle:
     fold.  :meth:`result` returns the finalized result(s), refreshing
     first so reads are always current with the pinned table;
     :meth:`refresh` brings the retained state current without
-    finalizing; :meth:`stale` says whether the table moved since the
+    finalizing and reports HOW (``"noop"`` / ``"delta"`` /
+    ``"rescan"``); :meth:`stale` says whether the table moved since the
     last refresh.  Results come back as a single value when built from
     one statement, else a list in statement order.
+
+    Handles are thread-safe: an internal lock serializes
+    refresh/result/state reads, so two concurrent server drains (or a
+    drain racing a direct dashboard read) cannot interleave a delta
+    fold with a rescan or double-fold one append.  The retained state
+    transitions atomically from one pinned version to the next.
     """
 
     def __init__(self, nodes: Sequence, *, single: bool):
@@ -93,7 +101,10 @@ class MaterializedHandle:
         self._merge_fn = None
         self._final_fn = None
         self._result_cache: Any = None
-        self._full_build()
+        # reentrant: result() refreshes under the same lock
+        self._state_lock = threading.RLock()
+        with self._state_lock:
+            self._full_build()
 
     # -- validation --------------------------------------------------------
     def _validate(self, base) -> None:
@@ -154,15 +165,20 @@ class MaterializedHandle:
         return "segment"
 
     # -- state building ----------------------------------------------------
-    def _pin(self, state, n_rows: int) -> None:
+    def _pin(self, state, n_rows: int, version: int, epoch: int) -> None:
+        # pin the version OBSERVED WHEN THE FOLD WAS DECIDED, never the
+        # table's current one: a mutation landing mid-fold must leave the
+        # handle stale (the next refresh catches up), not silently pinned
+        # at a version whose rows the state never saw
         self._state = state
-        self._version = self.table.version
-        self._epoch = self.table.epoch
+        self._version = version
+        self._epoch = epoch
         self._n_rows = n_rows
         self._result_cache = None
 
     def _full_build(self) -> None:
         t = self.table
+        version, epoch = t.version, t.epoch
         if self.kind == "scan":
             state = run_many(self.members, t, block_size=self.block_size,
                              jit=self.jit, engine=self.engine,
@@ -178,14 +194,17 @@ class MaterializedHandle:
                                 method=self._method, mesh=self.mesh,
                                 row_axes=self.row_axes, jit=self.jit,
                                 finalize=False)
-        self._pin(state, t.n_rows)
+        self._pin(state, t.n_rows, version, epoch)
 
-    def _delta_fold(self) -> bool:
-        """Fold ONLY rows ``[pinned:]`` and merge into the retained
-        state; returns False when delta semantics cannot match a full
-        rescan (a new group id under open group-count semantics)."""
+    def _delta_fold(self, version: int, epoch: int, n_rows: int) -> bool:
+        """Fold ONLY rows ``[pinned:n_rows]`` and merge into the
+        retained state; returns False when delta semantics cannot match
+        a full rescan (a new group id under open group-count
+        semantics).  ``version``/``epoch``/``n_rows`` are the table
+        coordinates the caller observed when it decided to delta —
+        what the merged state gets pinned at."""
         t = self.table
-        delta_cols = {k: v[self._n_rows:] for k, v in t.columns.items()}
+        delta_cols = {k: v[self._n_rows:n_rows] for k, v in t.columns.items()}
         delta = Table(delta_cols)
         if self.kind == "scan":
             new = run_local(self.fused, delta, block_size=self.block_size,
@@ -214,42 +233,59 @@ class MaterializedHandle:
             fn = self.fused.merge if self.kind == "scan" \
                 else jax.vmap(self.fused.merge)
             self._merge_fn = jax.jit(fn) if self.jit else fn
-        self._pin(self._merge_fn(self._state, new), t.n_rows)
+        self._pin(self._merge_fn(self._state, new), n_rows, version, epoch)
         return True
 
     # -- the living-view API -----------------------------------------------
+    @property
+    def version(self) -> int:
+        """The table version the retained state is pinned at."""
+        with self._state_lock:
+            return self._version
+
     def stale(self) -> bool:
         """Has the table mutated since the retained state was pinned?"""
-        return self.table.version != self._version
+        with self._state_lock:
+            return self.table.version != self._version
 
-    def refresh(self) -> "MaterializedHandle":
-        """Bring the retained state current.  No-op at the pinned
-        version; a pure append (epoch unchanged) delta-folds the new
-        rows; anything else rescans."""
-        t = self.table
-        if t.version == self._version:
-            return self
-        if t.epoch == self._epoch and t.n_rows >= self._n_rows:
-            if t.n_rows == self._n_rows:  # empty append
-                self._version = t.version
-                return self
-            if self._delta_fold():
-                return self
-        self._full_build()
-        return self
+    def refresh(self) -> str:
+        """Bring the retained state current and say how: ``"noop"``
+        (already at the pinned version, or an empty append), ``"delta"``
+        (pure append — fold ONLY the new rows and merge, zero rescans),
+        or ``"rescan"`` (the table was invalidated, or delta semantics
+        could not match a full run — the data was re-read in full).
+        Callers accounting for scans saved must treat ``"rescan"``
+        honestly: the read happened, it just happened in here."""
+        with self._state_lock:
+            t = self.table
+            # one consistent observation of the table's coordinates: the
+            # fold decided from it pins exactly these, so a mutation
+            # racing the fold leaves the handle honestly stale
+            version, epoch, n_rows = t.version, t.epoch, t.n_rows
+            if version == self._version:
+                return "noop"
+            if epoch == self._epoch and n_rows >= self._n_rows:
+                if n_rows == self._n_rows:  # empty append
+                    self._version = version
+                    return "noop"
+                if self._delta_fold(version, epoch, n_rows):
+                    return "delta"
+            self._full_build()
+            return "rescan"
 
     def result(self, *, refresh: bool = True) -> Any:
         """Finalized result(s) at the current table version (refreshing
         first unless ``refresh=False``), cached per pinned state."""
-        if refresh:
-            self.refresh()
-        if self._result_cache is None:
-            if self._final_fn is None:
-                fn = self.fused.final if self.kind == "scan" \
-                    else jax.vmap(self.fused.final)
-                self._final_fn = jax.jit(fn) if self.jit else fn
-            self._result_cache = self._final_fn(self._state)
-        outs = self._result_cache
+        with self._state_lock:
+            if refresh:
+                self.refresh()
+            if self._result_cache is None:
+                if self._final_fn is None:
+                    fn = self.fused.final if self.kind == "scan" \
+                        else jax.vmap(self.fused.final)
+                    self._final_fn = jax.jit(fn) if self.jit else fn
+                self._result_cache = self._final_fn(self._state)
+            outs = self._result_cache
         return outs[0] if self._single else list(outs)
 
 

@@ -1,4 +1,4 @@
-"""Analytics server — cross-session scan sharing behind an admission window.
+"""Analytics server — cross-session scan sharing behind admission windows.
 
 The PR-5 planner proves statement fusion works inside ONE analyst's
 batch; production is thousands of concurrent analysts hitting the same
@@ -14,58 +14,94 @@ existing planner at a statement *queue* instead of a batch:
   :class:`~repro.core.session.Session`\\ s (constructed with
   ``Session(server=...)``) submit logical plan nodes; each submit
   returns an async-style :class:`ServerHandle` immediately.
-* Submitted statements sit in a short **admission window** (flushed when
-  the pending count reaches ``window_size``, when ``window_timeout``
-  seconds have passed since the window opened, on an explicit
-  :meth:`flush`, or on demand when any handle's ``result()`` is read).
-  The drain plans *across* sessions with :func:`repro.core.plan.plan`
-  unchanged: compatible ``ScanAgg``\\ s over one (table, mask,
-  block size) fuse into ONE ``run_many`` pass and compatible grouped
-  statements into ONE ``run_grouped`` pass, regardless of which session
-  submitted them.  Results route back per-handle via each statement's
-  projection isolation, exactly as in a single-session batch.
+* Submitted statements sit in short **per-table admission windows**:
+  statements partition by base table, and each table's window drains
+  independently (count threshold ``window_size``, age
+  ``window_timeout``, explicit :meth:`flush`, or on demand when a
+  handle's ``result()`` is read) — a slow statement on table A never
+  delays table B's drain.  The drain plans *across* sessions with
+  :func:`repro.core.plan.plan` unchanged: compatible ``ScanAgg``\\ s
+  over one (table, mask, block size) fuse into ONE ``run_many`` pass
+  and compatible grouped statements into ONE ``run_grouped`` pass,
+  regardless of which session submitted them.  Results route back
+  per-handle via each statement's projection isolation, exactly as in a
+  single-session batch.
+* With ``drain="thread"`` a dedicated **background drainer** owns
+  liveness: ``window_timeout`` fires with NO traffic (no
+  submit/poll/result call is ever needed for a submitted statement to
+  resolve), and each due window drains on its own short-lived worker so
+  unrelated tables' drains overlap.  The default ``drain="demand"``
+  preserves the synchronous PR-8 contract (drains happen on the
+  submitting / polling / reading thread) for tests and single-threaded
+  embedding.
+* **Execution runs outside the admission lock.**  A drain snapshots its
+  window under the lock, then runs cache probes, view refreshes,
+  ``plan()`` and ``execute()`` *off* it — submits and cache probes on
+  other threads stay responsive during a scan.  A per-table drain lock
+  serializes two drains of ONE table (window snapshot plus any
+  in-flight execution) while different tables' drains overlap freely.
 * Statements whose :func:`~repro.core.plan.semantic_fingerprint` match
   within one window are **deduplicated**: the fold runs once and every
   submitter's handle receives the same result — N identical profile
   statements cost one member in one fused pass, not N.
-* In front of planning sits a **version-keyed result cache**:
+* In front of planning sits a **byte-budgeted result cache**:
   ``(table id, table version, semantic fingerprint) -> finalized raw
   result``.  A repeated statement against an unchanged table is answered
   with ZERO scans, bit-identical for exact-state aggregates by the same
-  argument as delta folds (it IS the previously computed state).  The
-  cache is probed at window-drain time — never at admission — so a table
-  mutated between admission and execution can never satisfy a stale
-  entry: ``Table.append`` / ``invalidate`` bump the version (missing
-  every old key) AND fire the table's mutation hooks, which evict the
-  dead entries eagerly.
+  argument as delta folds (it IS the previously computed state).
+  Admission/eviction is size- and cost-aware (GDSF: entries are
+  prioritized by ``cost / bytes`` over an aging clock, with the pytree
+  byte size measured via ``jax.tree_util`` and the cost hint taken from
+  the planner's measured/heuristic pass cost), so one huge grouped
+  state cannot evict a thousand cheap profile results; ``cache_entries``
+  still bounds the entry count.  The cache is probed at window-drain
+  time — never at admission — so a table mutated between admission and
+  execution can never satisfy a stale entry: ``Table.append`` /
+  ``invalidate`` bump the version (missing every old key) AND fire the
+  table's mutation hooks, which evict the dead entries eagerly.
 * Materialized living views (:func:`repro.core.materialize.materialize`)
   **register as cache fillers** (:meth:`register_view`): a statement
   matching a registered view's fingerprint is answered from the view's
-  retained fold state — refreshed by a delta fold when the table has
-  only appended, still zero scans — and the finalized result is pushed
-  into the cache at the current version.
+  retained fold state and the finalized result is pushed into the cache
+  at the version the view pins.  The refresh KIND is surfaced honestly:
+  a pure append delta-folds (``refresh="delta"`` — still zero scans),
+  but a view whose table was ``invalidate``\\ d performs a full rescan
+  inside the hit path (``refresh="rescan"``) and is NOT counted as a
+  scan saved.
 
 Observability: every drain records a ``kind="admission"`` trace event
-(window size, statements planned after dedup/cache, physical passes,
-``scans_saved``) and every cache answer a ``kind="cache_hit"`` event, so
-tests and benches assert sharing instead of timing it
-(:meth:`repro.core.trace.Trace.summary`).
+for ITS table (window size, statements planned after dedup/cache,
+physical passes, ``scans_saved``, plus ``opened_at`` / ``drained_at``
+monotonic timestamps and the window's queue ``latency`` so per-table
+isolation is asserted from trace data, never wall-clock heuristics) and
+every cache answer a ``kind="cache_hit"`` event carrying its refresh
+kind; :meth:`repro.core.trace.Trace.summary` rolls totals AND a
+per-table breakdown up from these events.
 
-Thread safety: submits, flushes and reads may come from any thread (the
-bench drives 8 submitter threads); one re-entrant lock serializes window
-state and execution.  Mutating a table concurrently with a flush that
-scans it is the caller's race, exactly as with direct engine calls — the
-server only guarantees it will never *cache* across such a mutation (the
-fill re-checks the version after execution).
+Thread safety: submits, flushes and reads may come from any thread.
+The admission lock guards only window/cache/registry *state* and is
+never held across planning, execution or view refresh; per-table drain
+locks serialize same-table drains.  Hooked tables are held via
+``weakref`` with a finalizer that purges the dead table's cache/view/
+window entries the moment it is collected — a long-lived server never
+pins transient tables (or their device arrays), and live cache keys
+keep the documented ``id()``-stability contract because a table's
+entries cannot outlive the table whose ``id`` keyed them.  Mutating a
+table concurrently with a drain that scans it is the caller's race,
+exactly as with direct engine calls — the server only guarantees it
+will never *cache* across such a mutation (the fill re-checks the
+version after execution).
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
-from dataclasses import dataclass, field
+import weakref
+from dataclasses import dataclass
 from typing import Any, Callable
+
+import jax
 
 from .plan import GroupedScanAgg, ScanAgg, plan, semantic_fingerprint
 from .table import GroupedView, Table
@@ -81,10 +117,10 @@ class ServerHandle:
     """Async-style result of one submitted statement.
 
     Returned immediately by :meth:`AnalyticsServer.submit`;
-    :meth:`result` drains the admission window on demand if the
-    statement is still pending, then blocks (``timeout`` seconds at
-    most) until the value is routed back.  Handles are resolved exactly
-    once; repeated reads return the same value.
+    :meth:`result` drains the admission window holding the statement on
+    demand, while :meth:`wait` blocks passively (no drain — the way to
+    observe a background drainer doing its job).  Handles are resolved
+    exactly once; repeated reads return the same value.
     """
 
     def __init__(self, label: str, server: "AnalyticsServer"):
@@ -97,6 +133,13 @@ class ServerHandle:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until the statement resolves WITHOUT triggering a drain
+        (unlike :meth:`result`); returns whether it did.  Only useful
+        when something else drains — a background drain thread, another
+        session's flush."""
+        return self._event.wait(timeout)
+
     def _resolve(self, value: Any) -> None:
         self._value = value
         self._event.set()
@@ -106,16 +149,28 @@ class ServerHandle:
         self._event.set()
 
     def result(self, timeout: float | None = None) -> Any:
+        """The statement's value, draining its window on demand.
+
+        An already-resolved handle returns immediately — no drain is
+        triggered for other statements' benefit.  ``timeout`` bounds the
+        WHOLE call: the demand drain (including waiting out another
+        thread's in-flight drain of the same table) and the final wait
+        share one deadline, so ``result(timeout=t)`` returns or raises
+        :class:`TimeoutError` within ~``t`` seconds even when the server
+        is busy executing.
+        """
         if not self._event.is_set():
-            # Demand execution: drain the window holding this statement.
-            # If another thread is mid-flush, flush() blocks on the
-            # server lock until it finishes, then drains any remainder —
-            # either way the event is set when our window has executed.
-            self._server.flush()
-            if not self._event.wait(timeout):
-                raise TimeoutError(
-                    f"statement {self.label!r} still pending after "
-                    f"{timeout}s")
+            if timeout is None:
+                self._server.flush()
+                self._event.wait()
+            else:
+                deadline = time.monotonic() + timeout
+                self._server.flush(timeout=timeout)
+                remaining = deadline - time.monotonic()
+                if not self._event.wait(max(0.0, remaining)):
+                    raise TimeoutError(
+                        f"statement {self.label!r} still pending after "
+                        f"{timeout}s")
         if self._error is not None:
             raise RuntimeError(
                 f"statement {self.label!r} failed in its admission "
@@ -141,213 +196,475 @@ def _node_table(node) -> Table | None:
     return t if isinstance(t, Table) else None
 
 
+class _Window:
+    """One table's admission window: its queued statements, the time the
+    oldest was admitted, and the drain lock that serializes this table's
+    drains (snapshot + off-lock execution) against each other."""
+
+    __slots__ = ("items", "opened", "drain_lock")
+
+    def __init__(self):
+        self.items: list[_Pending] = []
+        self.opened: float | None = None
+        self.drain_lock = threading.Lock()
+
+
+@dataclass
+class _CacheEntry:
+    """One cached result with its GDSF accounting."""
+
+    value: Any
+    nbytes: int
+    cost: float                     # planner cost hint (pass cost / members)
+    prio: float                     # GDSF priority: clock + cost / nbytes
+
+
+def _tree_nbytes(value) -> int:
+    """Device-memory footprint of a cached result: summed ``nbytes``
+    over the pytree's array leaves (scalars count a word)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        nb = getattr(leaf, "nbytes", None)
+        total += int(nb) if nb is not None else 8
+    return max(total, 1)
+
+
 class AnalyticsServer:
     """Long-lived cross-session statement service (see module docstring).
 
-    ``window_size`` — pending-statement count that auto-drains the
-    window; ``window_timeout`` — seconds after which the open window
-    drains at the next submit or :meth:`poll` (``None`` = count/demand
-    only); ``cache_entries`` — LRU bound on the result cache.
+    ``window_size`` — per-table pending-statement count that auto-drains
+    a window; ``window_timeout`` — seconds after which an open window
+    drains (``None`` = count/demand only); ``drain`` — ``"demand"``
+    (default: drains run on the submitting/polling/reading thread, the
+    PR-8 contract) or ``"thread"`` (a background drainer fires timeouts
+    without traffic and dispatches each due window to its own worker);
+    ``cache_bytes`` / ``cache_entries`` — result-cache budget in pytree
+    bytes and entry count.
 
     ``stats`` tallies lifetime counters (submitted / windows / planned /
-    deduped / cache_hits / view_hits / scans_saved / evicted) for
-    serving dashboards; per-execution assertions should use the trace
-    events instead.
+    deduped / cache_hits / view_hits / scans_saved / evicted /
+    cache_evicted / cache_rejected / drain_errors) for serving
+    dashboards; per-execution assertions should use the trace events
+    instead.
     """
 
     def __init__(self, *, window_size: int = 32,
                  window_timeout: float | None = None,
-                 cache_entries: int = 1024):
+                 drain: str = "demand",
+                 cache_entries: int = 1024,
+                 cache_bytes: int = 256 << 20):
         if window_size < 1:
             raise ValueError("window_size must be >= 1")
+        if drain not in ("demand", "thread"):
+            raise ValueError(f"drain must be 'demand' or 'thread', "
+                             f"got {drain!r}")
         self.window_size = int(window_size)
         self.window_timeout = window_timeout
+        self.drain = drain
         self.cache_entries = int(cache_entries)
+        self.cache_bytes = int(cache_bytes)
         self._lock = threading.RLock()
-        self._pending: list[_Pending] = []
-        self._window_opened: float | None = None
+        # per-table admission windows: id(table) (or None for tableless
+        # statements) -> _Window
+        self._windows: dict[Any, _Window] = {}
         self._seq = 0
-        # (table id, table version, fingerprint) -> finalized raw result
-        self._cache: OrderedDict[tuple, Any] = OrderedDict()
+        # (table id, table version, fingerprint) -> _CacheEntry
+        self._cache: dict[tuple, _CacheEntry] = {}
+        self._cache_used = 0            # bytes resident
+        self._clock = 0.0               # GDSF aging clock
         # (table id, fingerprint) -> (MaterializedHandle, statement index)
         self._views: dict[tuple, tuple] = {}
-        # strong refs to hooked tables: keeps id()s stable for cache keys
-        # and lets close() deregister the eviction hooks
-        self._hooked: dict[int, Table] = {}
+        # weak refs to hooked tables: a long-lived server must not pin
+        # transient tables; the finalizer purges a dead table's cache /
+        # view / window entries (and the weakref bookkeeping) so its id
+        # can never be recycled into a live cache key
+        self._hooked: dict[int, weakref.ref] = {}
+        self._finalizers: dict[int, weakref.finalize] = {}
         self.stats = {"submitted": 0, "windows": 0, "planned": 0,
                       "deduped": 0, "cache_hits": 0, "view_hits": 0,
-                      "scans_saved": 0, "evicted": 0}
+                      "scans_saved": 0, "evicted": 0, "cache_evicted": 0,
+                      "cache_rejected": 0, "drain_errors": 0}
+        self._closing = False
+        self._wake = threading.Event()
+        self._workers: list[threading.Thread] = []
+        self._drainer: threading.Thread | None = None
+        if drain == "thread":
+            self._drainer = threading.Thread(
+                target=self._drain_loop, daemon=True,
+                name="analytics-drainer")
+            self._drainer.start()
 
     # -- admission ---------------------------------------------------------
     def submit(self, node, *, post: Callable | None = None,
                label: str | None = None) -> ServerHandle:
         """Admit one logical plan node; returns its handle immediately.
-        The statement executes when its window drains (count threshold,
-        timeout, explicit :meth:`flush`, or a demanded ``result()``)."""
+        The statement executes when ITS TABLE's window drains (count
+        threshold, timeout, explicit :meth:`flush`, a demanded
+        ``result()``, or the background drainer).  The admission itself
+        never blocks on an in-flight drain — at most it performs a
+        demand-mode drain of a window that just became due."""
+        table = _node_table(node)
+        key = id(table) if table is not None else None
+        fp = semantic_fingerprint(node)
         with self._lock:
             name = label or getattr(node, "label", None) or f"q{self._seq}"
             self._seq += 1
             handle = ServerHandle(name, self)
-            table = _node_table(node)
-            fp = semantic_fingerprint(node)
             if fp is not None and table is not None:
                 self._hook_table(table)
+            win = self._windows.setdefault(key, _Window())
             now = time.monotonic()
-            if not self._pending:
-                self._window_opened = now
-            self._pending.append(_Pending(node, post, handle, fp, table))
+            opened_now = not win.items
+            if opened_now:
+                win.opened = now
+            win.items.append(_Pending(node, post, handle, fp, table))
             self.stats["submitted"] += 1
-            if (len(self._pending) >= self.window_size
-                    or (self.window_timeout is not None
-                        and now - self._window_opened
-                        >= self.window_timeout)):
-                self.flush()
+            due = (len(win.items) >= self.window_size
+                   or (self.window_timeout is not None
+                       and now - win.opened >= self.window_timeout))
+        threaded = self._drainer is not None and self._drainer.is_alive()
+        if due:
+            if threaded:
+                self._wake.set()
+            else:
+                # nowait: if this table's drain is in-flight on another
+                # thread, ITS refill loop picks these statements up — a
+                # submit never blocks behind an executing drain
+                self._drain_key(key, nowait=True)
+        elif threaded and opened_now and self.window_timeout is not None:
+            self._wake.set()        # new window: recompute the deadline
+        if not threaded and self.window_timeout is not None:
+            self.poll()             # other tables' overdue windows
         return handle
 
     def poll(self) -> int:
-        """Drain the window iff its timeout has expired (serving loops
-        call this between accepts); returns statements drained."""
+        """Drain every window whose timeout has expired (demand-mode
+        serving loops call this between accepts; with ``drain="thread"``
+        the background drainer makes it redundant); returns statements
+        drained."""
+        if self.window_timeout is None:
+            return 0
         with self._lock:
-            if (self._pending and self.window_timeout is not None
-                    and time.monotonic() - self._window_opened
-                    >= self.window_timeout):
-                return self.flush()
-        return 0
+            now = time.monotonic()
+            due = [k for k, w in self._windows.items()
+                   if w.items and w.opened is not None
+                   and now - w.opened >= self.window_timeout]
+        return sum(self._drain_key(k, nowait=True) for k in due)
 
     @property
     def pending(self) -> int:
         with self._lock:
-            return len(self._pending)
+            return sum(len(w.items) for w in self._windows.values())
 
     # -- the drain ---------------------------------------------------------
-    def flush(self) -> int:
-        """Drain the admission window: answer what the cache (or a
+    def flush(self, timeout: float | None = None) -> int:
+        """Drain EVERY admission window: answer what the cache (or a
         registered view) can, dedup same-fingerprint statements, plan
-        the remainder as ONE cross-session batch, execute, route results
-        to their handles, and fill the cache.  Returns the number of
-        statements drained."""
+        each window as ONE cross-session batch, execute, route results
+        to their handles, and fill the cache.  Waits out in-flight
+        drains (their statements are resolved when this returns), so a
+        plain ``flush()`` still means "everything admitted before this
+        call has settled".  ``timeout`` bounds the whole call — windows
+        whose drain lock cannot be acquired before the deadline are
+        skipped.  Returns the number of statements drained by THIS
+        call."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._lock:
-            batch, self._pending = self._pending, []
-            self._window_opened = None
-            if not batch:
-                return 0
+            keys = [k for k, w in self._windows.items()
+                    if w.items or w.drain_lock.locked()]
+        return sum(self._drain_key(k, deadline=deadline) for k in keys)
+
+    def _drain_key(self, key, deadline: float | None = None,
+                   nowait: bool = False) -> int:
+        """Drain one table's window (and any count-due refill that
+        accumulated while its execution ran off-lock).  Serializes with
+        other drains of the SAME table via the window's drain lock;
+        different tables' drains overlap freely.  ``nowait`` skips
+        instead of waiting for an in-flight drain — safe for submit/poll
+        triggers because the in-flight drain's refill loop re-checks the
+        window AFTER releasing the lock, so it picks these items up."""
+        win = self._windows.get(key)
+        drained = 0
+        while win is not None:
+            if nowait:
+                if not win.drain_lock.acquire(blocking=False):
+                    return drained
+            elif deadline is None:
+                win.drain_lock.acquire()
+            elif not win.drain_lock.acquire(
+                    timeout=max(0.0, deadline - time.monotonic())):
+                return drained
+            try:
+                with self._lock:
+                    batch = win.items
+                    win.items = []
+                    opened = win.opened
+                    win.opened = None
+                if not batch:
+                    return drained
+                drained += self._run_window(key, batch, opened)
+            finally:
+                win.drain_lock.release()
+            # A window may have refilled PAST a drain trigger while we
+            # executed (submits stay non-blocking during a drain); loop
+            # so count/timeout-due statements never strand.
+            with self._lock:
+                now = time.monotonic()
+                refilled = bool(win.items) and (
+                    len(win.items) >= self.window_size
+                    or (self.window_timeout is not None
+                        and win.opened is not None
+                        and now - win.opened >= self.window_timeout))
+            if not refilled:
+                return drained
+        return drained
+
+    def _run_window(self, key, batch: list[_Pending],
+                    opened: float | None) -> int:
+        """Execute one snapshotted window OFF the admission lock (the
+        caller holds only the window's drain lock)."""
+        t_drain = time.monotonic()
+        with self._lock:
             self.stats["windows"] += 1
 
-            to_plan: list[_Pending] = []
-            rep_of: dict[tuple, int] = {}    # dedup key -> to_plan index
-            routes: list[tuple[_Pending, int]] = []
-            hits = deduped = 0
-            for p in batch:
-                if p.fp is not None and p.table is not None:
-                    tid = id(p.table)
-                    # version re-check happens HERE, at execute time: the
-                    # key carries the table's *current* version, so an
-                    # entry probed against a table mutated mid-window can
-                    # only miss — the statement replans below.
-                    val = self._answer(tid, p.table, p.fp)
-                    if val is not _MISS:
-                        hits += 1
-                        self._resolve(p, val)
-                        continue
-                    dkey = (tid, p.fp)
-                    if dkey in rep_of:
-                        deduped += 1
+        to_plan: list[_Pending] = []
+        rep_of: dict[tuple, int] = {}    # dedup key -> to_plan index
+        routes: list[tuple[_Pending, int]] = []
+        hits = deduped = view_rescans = 0
+        for p in batch:
+            if p.fp is not None and p.table is not None:
+                tid = id(p.table)
+                # version re-check happens HERE, at execute time: the
+                # key carries the table's *current* version, so an
+                # entry probed against a table mutated mid-window can
+                # only miss — the statement replans below.
+                val, rescans = self._answer(tid, p.table, p.fp)
+                if val is not _MISS:
+                    hits += 1
+                    view_rescans += rescans
+                    self._resolve(p, val)
+                    continue
+                dkey = (tid, p.fp)
+                if dkey in rep_of:
+                    deduped += 1
+                    with self._lock:
                         self.stats["deduped"] += 1
-                        routes.append((p, rep_of[dkey]))
-                        continue
-                    rep_of[dkey] = len(to_plan)
-                routes.append((p, len(to_plan)))
-                to_plan.append(p)
+                    routes.append((p, rep_of[dkey]))
+                    continue
+                rep_of[dkey] = len(to_plan)
+            routes.append((p, len(to_plan)))
+            to_plan.append(p)
 
-            # versions at plan time, for the post-execution cache fill
-            fill = [(j, p, id(p.table), p.table.version)
-                    for j, p in enumerate(to_plan)
-                    if p.fp is not None and p.table is not None]
-            n_scan_stmts = sum(
-                isinstance(p.node, (ScanAgg, GroupedScanAgg))
-                for p in batch)
-            try:
-                pl = plan([p.node for p in to_plan])
-                scan_passes = sum(1 for ps in pl.passes
-                                  if ps.kind in ("scan", "grouped"))
-                scans_saved = max(0, n_scan_stmts - scan_passes)
-                _record("admission", None, window=len(batch),
-                        planned=len(to_plan), deduped=deduped,
-                        cache_hits=hits, passes=len(pl.passes),
-                        scans_saved=scans_saved)
+        # versions at plan time, for the post-execution cache fill
+        fill = [(j, p, id(p.table), p.table.version)
+                for j, p in enumerate(to_plan)
+                if p.fp is not None and p.table is not None]
+        n_scan_stmts = sum(
+            isinstance(p.node, (ScanAgg, GroupedScanAgg))
+            for p in batch)
+        try:
+            pl = plan([p.node for p in to_plan])
+            scan_passes = sum(1 for ps in pl.passes
+                              if ps.kind in ("scan", "grouped"))
+            # a view answer that had to RESCAN is not a scan saved —
+            # the data movement happened, just inside the hit path
+            scans_saved = max(
+                0, n_scan_stmts - scan_passes - view_rescans)
+            _record("admission", None, table=key, window=len(batch),
+                    planned=len(to_plan), deduped=deduped,
+                    cache_hits=hits, passes=len(pl.passes),
+                    scans_saved=scans_saved, view_rescans=view_rescans,
+                    opened_at=opened, drained_at=t_drain,
+                    latency=0.0 if opened is None else t_drain - opened)
+            with self._lock:
                 self.stats["planned"] += len(to_plan)
                 self.stats["scans_saved"] += scans_saved
-                results = pl.execute()
-            except BaseException as e:
-                for p, _ in routes:
-                    p.handle._fail(e)
-                raise
+            # planner cost hints, amortized per member — the cache
+            # admission policy's "how expensive is this to recompute"
+            cost_of: dict[int, float] = {}
+            for ps in pl.passes:
+                if ps.cost is None:
+                    continue
+                share = float(ps.cost) / max(len(ps.members), 1)
+                for i, _ in ps.members:
+                    cost_of[i] = share
+            results = pl.execute()
+        except BaseException as e:
+            # an execution/planning error belongs to the WHOLE batch:
+            # every handle fails with it (and a synchronous flush caller
+            # sees it re-raised; the background drainer counts it)
+            for p, _ in routes:
+                p.handle._fail(e)
+            raise
+        with self._lock:
             for j, p, tid, version in fill:
                 # fill only if the table did not move during execution —
                 # a mid-flight mutation makes the scanned rows ambiguous
                 if p.table.version == version:
-                    self._cache_put((tid, version, p.fp), results[j])
-            first_err = None
-            for p, j in routes:
-                err = self._resolve(p, results[j])
-                if first_err is None:
-                    first_err = err
-            if first_err is not None:
-                raise first_err
-            return len(batch)
+                    self._cache_put((tid, version, p.fp), results[j],
+                                    cost=cost_of.get(j, 1.0))
+        for p, j in routes:
+            self._resolve(p, results[j])
+        return len(batch)
 
-    def _resolve(self, p: _Pending, raw: Any) -> BaseException | None:
+    def _resolve(self, p: _Pending, raw: Any) -> None:
         """Apply the submitter's post and settle the handle.  A failing
-        post fails ONLY its own handle (returned, not raised, so the
-        rest of the window still resolves)."""
+        post fails ONLY its own handle — it is the submitter's callback,
+        so its exception surfaces on the submitter's ``result()``, never
+        on whoever happened to trigger the drain, and never on the other
+        handles in the window."""
         try:
             value = p.post(raw) if p.post is not None else raw
         except BaseException as e:
             p.handle._fail(e)
-            return e
+            return
         p.handle._resolve(value)
-        return None
+
+    # -- the background drainer --------------------------------------------
+    def _drain_loop(self) -> None:
+        """Dedicated drain thread: sleeps until the earliest open
+        window's deadline (or a wake signal: new window, count-due
+        submit, close), then dispatches each due window to its own
+        worker so one table's slow drain never delays another's."""
+        while not self._closing:
+            timeout = None
+            if self.window_timeout is not None:
+                with self._lock:
+                    opens = [w.opened for w in self._windows.values()
+                             if w.items and w.opened is not None]
+                if opens:
+                    timeout = max(
+                        0.0,
+                        min(opens) + self.window_timeout - time.monotonic())
+            self._wake.wait(timeout)
+            self._wake.clear()
+            if self._closing:
+                return
+            with self._lock:
+                now = time.monotonic()
+                due = [k for k, w in self._windows.items()
+                       if w.items and not w.drain_lock.locked()
+                       and (len(w.items) >= self.window_size
+                            or (self.window_timeout is not None
+                                and w.opened is not None
+                                and now - w.opened >= self.window_timeout))]
+            for k in due:
+                self._spawn_drain(k)
+
+    def _spawn_drain(self, key) -> None:
+        def work():
+            try:
+                self._drain_key(key)
+            except Exception:
+                # already routed to every handle in the failed window;
+                # the drainer itself must survive a poisoned statement
+                with self._lock:
+                    self.stats["drain_errors"] += 1
+
+        th = threading.Thread(target=work, daemon=True,
+                              name=f"analytics-drain-{key}")
+        with self._lock:
+            self._workers = [w for w in self._workers if w.is_alive()]
+            self._workers.append(th)
+        th.start()
 
     # -- the result cache --------------------------------------------------
     def _answer(self, tid: int, table: Table, fp: tuple):
-        """Cache-or-view answer for (table @ current version, fp), or
-        ``_MISS``.  Records the ``cache_hit`` trace event on a hit."""
-        key = (tid, table.version, fp)
-        val = self._cache.get(key, _MISS)
-        source = "cache"
-        if val is _MISS:
+        """Cache-or-view answer for (table @ current version, fp) as
+        ``(value, rescans)``, or ``(_MISS, 0)``.  View refreshes run OFF
+        the admission lock (they may delta-fold or rescan); ``rescans``
+        is 1 when the view had to fully rescan — the honest input to the
+        ``scans_saved`` accounting.  Records the ``cache_hit`` trace
+        event (with its refresh kind) on a hit."""
+        with self._lock:
+            ent = self._cache.get((tid, table.version, fp))
+            if ent is not None:
+                ent.prio = self._clock + ent.cost / ent.nbytes
+                self.stats["cache_hits"] += 1
+                _record("cache_hit", None, source="cache", refresh="none",
+                        table_version=table.version)
+                return ent.value, 0
             view = self._views.get((tid, fp))
-            if view is None:
-                return _MISS
-            handle, idx = view
-            # refresh + finalize: appends delta-fold (kind="delta" in the
-            # trace — still zero scans), anything else rescans inside the
-            # handle; either way the answer is current and gets cached at
-            # the version the handle now pins.
-            vals = handle.result()
-            vals = vals if isinstance(vals, list) else [vals]
-            val = vals[idx]
-            self._cache_put((tid, table.version, fp), val)
-            source = "view"
+        if view is None:
+            return _MISS, 0
+        handle, idx = view
+        # refresh + finalize OFF the lock: appends delta-fold
+        # (kind="delta" in the trace — still zero scans); an invalidated
+        # table forces a FULL RESCAN inside the handle.  Either way the
+        # answer is current and gets cached at the version the handle
+        # pins — and the refresh kind is surfaced, not laundered.
+        kind = handle.refresh()
+        vals = handle.result(refresh=False)
+        vals = vals if isinstance(vals, list) else [vals]
+        val = vals[idx]
+        with self._lock:
+            self._cache_put((tid, handle.version, fp), val,
+                            cost=float(handle.table.n_rows))
+            self.stats["cache_hits"] += 1
             self.stats["view_hits"] += 1
-        else:
-            self._cache.move_to_end(key)
-        self.stats["cache_hits"] += 1
-        _record("cache_hit", None, source=source,
-                table_version=table.version)
-        return val
+        _record("cache_hit", None, source="view", refresh=kind,
+                table_version=handle.version)
+        return val, (1 if kind == "rescan" else 0)
 
-    def _cache_put(self, key: tuple, value: Any) -> None:
-        self._cache[key] = value
-        self._cache.move_to_end(key)
-        while len(self._cache) > self.cache_entries:
-            self._cache.popitem(last=False)
+    def _cache_put(self, key: tuple, value: Any, *,
+                   cost: float = 1.0) -> None:
+        """Size/cost-aware admission (GDSF): an entry's priority is the
+        aging clock plus ``cost / bytes``, evictions pop the minimum
+        priority and advance the clock to it.  A cheap-to-recompute
+        giant therefore evicts FIRST (often immediately — effectively
+        refused admission) instead of flushing many small expensive
+        results; anything larger than the whole budget is rejected
+        outright.  Caller holds the admission lock."""
+        nbytes = _tree_nbytes(value)
+        if nbytes > self.cache_bytes:
+            self.stats["cache_rejected"] += 1
+            return
+        old = self._cache.pop(key, None)
+        if old is not None:
+            self._cache_used -= old.nbytes
+        self._cache[key] = _CacheEntry(
+            value, nbytes, float(cost), self._clock + float(cost) / nbytes)
+        self._cache_used += nbytes
+        while (self._cache_used > self.cache_bytes
+               or len(self._cache) > self.cache_entries):
+            victim = min(self._cache, key=lambda k: self._cache[k].prio)
+            ent = self._cache.pop(victim)
+            self._cache_used -= ent.nbytes
+            self._clock = ent.prio
+            self.stats["cache_evicted"] += 1
 
     def _hook_table(self, table: Table) -> None:
         tid = id(table)
         if tid not in self._hooked:
             table.on_mutation(self._evict)
-            self._hooked[tid] = table
+            self._hooked[tid] = weakref.ref(table)
+            self._finalizers[tid] = weakref.finalize(
+                table, AnalyticsServer._table_died, weakref.ref(self), tid)
+
+    @staticmethod
+    def _table_died(server_ref, tid: int) -> None:
+        """Finalizer for a hooked table: purge every server entry keyed
+        by its (about to be recycled) id.  Static + weak so the
+        finalizer pins neither the table nor the server."""
+        srv = server_ref()
+        if srv is None:
+            return
+        with srv._lock:
+            srv._hooked.pop(tid, None)
+            srv._finalizers.pop(tid, None)
+            srv._drop_table_entries(tid)
+            win = srv._windows.get(tid)
+            if win is not None and not win.items \
+                    and not win.drain_lock.locked():
+                del srv._windows[tid]
+
+    def _drop_table_entries(self, tid: int) -> None:
+        """Drop cache entries and view registrations for a table id.
+        Caller holds the admission lock."""
+        for k in [k for k in self._cache if k[0] == tid]:
+            self._cache_used -= self._cache.pop(k).nbytes
+        for vk in [vk for vk in self._views if vk[0] == tid]:
+            del self._views[vk]
 
     def _evict(self, table: Table) -> None:
         """Mutation hook: drop every cache entry for the mutated table.
@@ -357,7 +674,7 @@ class AnalyticsServer:
             tid = id(table)
             dead = [k for k in self._cache if k[0] == tid]
             for k in dead:
-                del self._cache[k]
+                self._cache_used -= self._cache.pop(k).nbytes
             self.stats["evicted"] += len(dead)
 
     def register_view(self, handle) -> None:
@@ -378,19 +695,24 @@ class AnalyticsServer:
         """Drop every cached result (registered views stay)."""
         with self._lock:
             self._cache.clear()
+            self._cache_used = 0
 
     # -- introspection & lifecycle -----------------------------------------
     def explain(self) -> str:
-        """Render what draining the current window WOULD do — cache
+        """Render what draining the current windows WOULD do — cache
         answers, dedup, and the cross-session physical plan — without
-        executing (the serving analogue of ``Session.explain``)."""
+        executing (the serving analogue of ``Session.explain``).  All
+        per-table windows render as one combined batch; cross-table
+        statements never fuse, so the passes shown are exactly the
+        per-window drains' union."""
         with self._lock:
-            if not self._pending:
+            pending = [p for w in self._windows.values() for p in w.items]
+            if not pending:
                 return "(empty batch)"
             hits = deduped = 0
             seen: set = set()
             uniq = []
-            for p in self._pending:
+            for p in pending:
                 if p.fp is not None and p.table is not None:
                     tid = id(p.table)
                     if ((tid, p.table.version, p.fp) in self._cache
@@ -403,7 +725,7 @@ class AnalyticsServer:
                         continue
                     seen.add(dkey)
                 uniq.append(p.node)
-            head = (f"admission window: {len(self._pending)} submitted, "
+            head = (f"admission window: {len(pending)} submitted, "
                     f"{hits} cache-answerable, {deduped} deduped -> "
                     f"{len(uniq)} planned")
             if not uniq:
@@ -411,16 +733,32 @@ class AnalyticsServer:
             return head + "\n" + plan(uniq).explain()
 
     def close(self) -> None:
-        """Drain the window, deregister every table eviction hook and
-        drop the cache/view registries.  The server object stays usable
-        (tables re-hook on the next submit), but ``close()`` is the
-        polite end of a serving run."""
+        """Stop the background drainer (if any), drain every window,
+        deregister every table eviction hook and drop the cache/view
+        registries.  The server object stays usable for demand-mode
+        drains afterwards (tables re-hook on the next submit), but the
+        background drainer does NOT restart — ``close()`` is the polite
+        end of a serving run."""
+        self._closing = True
+        self._wake.set()
+        if self._drainer is not None:
+            self._drainer.join(timeout=10.0)
         with self._lock:
-            self.flush()
-            for t in self._hooked.values():
-                t.remove_mutation_hook(self._evict)
+            workers = list(self._workers)
+        for w in workers:
+            w.join(timeout=10.0)
+        self.flush()
+        with self._lock:
+            for tid, ref in list(self._hooked.items()):
+                t = ref()
+                if t is not None:
+                    t.remove_mutation_hook(self._evict)
+                fin = self._finalizers.pop(tid, None)
+                if fin is not None:
+                    fin.detach()
             self._hooked.clear()
             self._cache.clear()
+            self._cache_used = 0
             self._views.clear()
 
     def __enter__(self) -> "AnalyticsServer":

@@ -28,8 +28,12 @@ private batch for the server's *cross-session* admission window
 (:mod:`repro.core.server`): every statement submits immediately and
 returns an async-style :class:`~repro.core.server.ServerHandle`; the
 server fuses/dedups/caches across ALL attached sessions, and
-``run()``/``handle.result()`` drain the shared window on demand.  The
-statement-issuing API is identical in both modes.
+``run()``/``handle.result()`` drain the shared window on demand.
+Statements partition into per-table admission windows server-side, and
+a server built with ``drain="thread"`` resolves handles in the
+background — ``handle.wait()`` then observes results without this
+session ever draining anything.  The statement-issuing API is identical
+in both modes.
 """
 
 from __future__ import annotations
@@ -84,9 +88,20 @@ class _DerivedHandle:
         return (self._value is not _UNSET
                 or all(p.done() for p in self._parts))
 
-    def result(self) -> Any:
+    def result(self, timeout: float | None = None) -> Any:
+        """Gather + combine the parts; ``timeout`` bounds the WHOLE
+        gather (one shared deadline across parts, like
+        :meth:`ServerHandle.result`)."""
         if self._value is _UNSET:
-            self._value = self._combine([p.result() for p in self._parts])
+            if timeout is None:
+                vals = [p.result() for p in self._parts]
+            else:
+                import time as _time
+                deadline = _time.monotonic() + timeout
+                vals = [p.result(timeout=max(
+                    0.0, deadline - _time.monotonic()))
+                    for p in self._parts]
+            self._value = self._combine(vals)
         return self._value
 
 

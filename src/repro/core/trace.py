@@ -21,13 +21,21 @@ event count in the trace.
 
 The analytics server (:mod:`repro.core.server`) adds two serving-side
 kinds so cross-session sharing is *asserted*, not timed:
-``kind="admission"`` — one event per drained admission window, with the
-window size, statements actually planned (after result-cache hits and
-same-fingerprint dedup), physical passes, and ``scans_saved`` (scan
-statements submitted minus scan passes executed); and
-``kind="cache_hit"`` — one event per statement answered from the
-version-keyed result cache (or a registered materialized view) without
-any scan.  :meth:`Trace.summary` rolls every kind up into counts.
+``kind="admission"`` — one event per drained admission window, tagged
+with its base table (``detail["table"]``), the window size, statements
+actually planned (after result-cache hits and same-fingerprint dedup),
+physical passes, ``scans_saved`` (scan statements submitted minus scan
+passes executed minus any view answers that had to rescan), and the
+window's ``opened_at`` / ``drained_at`` monotonic timestamps +
+``latency`` — per-table isolation ("a slow drain on table A did not
+delay table B") is asserted from these timestamps, never from
+wall-clock heuristics; and ``kind="cache_hit"`` — one event per
+statement answered from the version-keyed result cache or a registered
+materialized view, carrying ``detail["refresh"]`` with the honest
+refresh kind (``"none"``/``"noop"``/``"delta"`` cost zero scans;
+``"rescan"`` means the view re-read the table inside the hit path).
+:meth:`Trace.summary` rolls every kind up into counts, plus a
+per-table breakdown of the serving events under ``"by_table"``.
 """
 
 from __future__ import annotations
@@ -80,29 +88,53 @@ class Trace:
 
     @property
     def admissions(self) -> list[Event]:
-        """Admission-window drains — one per :meth:`AnalyticsServer.flush`
-        that found pending statements; ``detail`` carries the window size,
-        planned/deduped/cache-hit statement counts and ``scans_saved``."""
+        """Admission-window drains — one per drained per-table window
+        (however triggered: count threshold, timeout, flush, demand, or
+        the background drainer); ``detail`` carries the base table id,
+        window size, planned/deduped/cache-hit statement counts,
+        ``scans_saved``, and the ``opened_at``/``drained_at``/``latency``
+        timestamps isolation assertions are built from."""
         return self._kind("admission")
 
     @property
     def cache_hits(self) -> list[Event]:
         """Statements answered from the server's version-keyed result
         cache (``detail["source"] == "cache"``) or a registered
-        materialized view (``"view"``) — zero physical scans either way."""
+        materialized view (``"view"``).  ``detail["refresh"]`` says what
+        the answer really cost: ``"none"``/``"noop"``/``"delta"`` cost
+        zero physical scans, ``"rescan"`` re-read the table inside the
+        hit path."""
         return self._kind("cache_hit")
 
     def summary(self) -> dict:
         """Counts per event kind, plus the admission windows' aggregate
         sharing tallies (``scans_saved`` / ``deduped`` summed across
-        windows) — what benches and serving logs print."""
-        out: dict[str, int] = {}
+        windows) — what benches and serving logs print.  When admission
+        events are present, ``out["by_table"]`` breaks the serving
+        tallies down per base table (keyed by the admission events'
+        ``detail["table"]`` id): windows drained, statements admitted,
+        scans saved, dedups and cache hits — the cross-table rollup for
+        per-table admission windows."""
+        out: dict[str, Any] = {}
         for e in self.events:
             out[e.kind] = out.get(e.kind, 0) + 1
+        admissions = self._kind("admission")
         for field in ("scans_saved", "deduped"):
-            total = sum(e.detail.get(field, 0) for e in self._kind("admission"))
+            total = sum(e.detail.get(field, 0) for e in admissions)
             if total:
                 out[field] = total
+        if admissions:
+            by: dict[Any, dict[str, int]] = {}
+            for e in admissions:
+                row = by.setdefault(e.detail.get("table"), {
+                    "windows": 0, "statements": 0, "scans_saved": 0,
+                    "deduped": 0, "cache_hits": 0})
+                row["windows"] += 1
+                row["statements"] += e.detail.get("window", 0)
+                row["scans_saved"] += e.detail.get("scans_saved", 0)
+                row["deduped"] += e.detail.get("deduped", 0)
+                row["cache_hits"] += e.detail.get("cache_hits", 0)
+            out["by_table"] = by
         return out
 
 

@@ -8,7 +8,10 @@ configurable append-ingest cadence racing the admission window.  It
 prints per-round serving telemetry — statements, physical scans, dedup
 and cache-hit counts, scans saved — straight from the server's trace
 events, i.e. the in-database serving story of the paper (§3.2) made
-observable: many analysts, one scan.
+observable: many analysts, one scan.  ``--drain=thread`` switches to
+the production posture: the server's background drainer fires the
+admission windows on ``--window-timeout`` and the analyst threads wait
+passively on their handles instead of flushing.
 
 This is the analytics sibling of :mod:`repro.launch.serve` (LM decode);
 see :mod:`repro.core.server` for the admission-window and cache
@@ -36,23 +39,39 @@ def _make_table(rows: int, dims: int, seed: int = 0) -> Table:
         "item": rng.integers(0, 1000, rows).astype(np.int32)})
 
 
-def _analyst_round(session: Session, table: Table) -> list:
-    session.profile(table)
-    session.linregr(table)
-    session.countmin_sketch(table)
-    session.fm_distinct_count(table)
+def _analyst_round(session: Session, table: Table,
+                   passive: bool = False) -> list:
+    hs = [session.profile(table), session.linregr(table),
+          session.countmin_sketch(table), session.fm_distinct_count(table)]
+    if passive:
+        # drain="thread": wait for the background drainer to fire the
+        # window — nothing on this thread ever demands a flush, so the
+        # subsequent run() only gathers already-resolved handles
+        for h in hs:
+            if hasattr(h, "wait"):
+                assert h.wait(60), "background drainer never fired"
     return session.run()
 
 
 def serve_analytics(*, rows: int = 100_000, dims: int = 8,
                     sessions: int = 8, rounds: int = 4,
-                    window_size: int = 64,
+                    window_size: int = 64, drain: str = "demand",
+                    window_timeout: float | None = None,
                     append_every: int = 2, seed: int = 0) -> dict:
-    """Run the demo loop; returns the final server stats dict."""
+    """Run the demo loop; returns the final server stats dict.
+
+    ``drain="thread"`` exercises the background drainer: every analyst
+    thread submits its round and then waits PASSIVELY on its handles
+    (no demand flush) — the server's own drain thread fires the windows
+    on ``window_timeout``, the production serving posture."""
     table = _make_table(rows, dims, seed)
     rng = np.random.default_rng(seed + 1)
-    server = AnalyticsServer(window_size=window_size)
+    if drain == "thread" and window_timeout is None:
+        window_timeout = 0.01
+    server = AnalyticsServer(window_size=window_size, drain=drain,
+                             window_timeout=window_timeout)
     pool = [Session(server=server) for _ in range(sessions)]
+    passive = drain == "thread"
 
     for rnd in range(rounds):
         if append_every and rnd and rnd % append_every == 0:
@@ -68,7 +87,7 @@ def serve_analytics(*, rows: int = 100_000, dims: int = 8,
             t0 = time.perf_counter()
             threads = [threading.Thread(
                 target=lambda i=i: results.__setitem__(
-                    i, _analyst_round(pool[i], table)))
+                    i, _analyst_round(pool[i], table, passive)))
                 for i in range(sessions)]
             for th in threads:
                 th.start()
@@ -97,13 +116,21 @@ def main():
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--window-size", type=int, default=64)
+    ap.add_argument("--drain", choices=("demand", "thread"),
+                    default="demand",
+                    help="'thread' = background drainer; analysts wait "
+                         "passively instead of flushing")
+    ap.add_argument("--window-timeout", type=float, default=None,
+                    help="window age (s) that auto-drains; defaults to "
+                         "0.01 with --drain=thread")
     ap.add_argument("--append-every", type=int, default=2,
                     help="ingest a delta every K rounds (0 = never)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_analytics(rows=args.rows, dims=args.dims,
                     sessions=args.sessions, rounds=args.rounds,
-                    window_size=args.window_size,
+                    window_size=args.window_size, drain=args.drain,
+                    window_timeout=args.window_timeout,
                     append_every=args.append_every, seed=args.seed)
 
 

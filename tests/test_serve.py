@@ -15,21 +15,47 @@ The contract under test (``core/server.py`` + ``Session(server=...)``):
   hooks evict eagerly AND the version bump misses every old key, so the
   window replans and matches a fresh solo run bitwise.
 * Living views registered with the server answer matching statements
-  from their retained fold state (delta-refreshed across appends).
+  from their retained fold state (delta-refreshed across appends) and
+  report their refresh kind honestly — an invalidated table's view
+  answer is a RESCAN, visible in the trace and excluded from
+  ``scans_saved``.
 * Regression: ``Session.run()`` on an empty batch returns ``[]`` and
   ``Session.explain()`` returns ``"(empty batch)"`` — both modes.
+
+Serving hardening (per-table windows + background drain):
+
+* Statements partition into PER-TABLE admission windows; each drains
+  independently, with its own ``admission`` trace event and a
+  cross-table ``Trace.summary()["by_table"]`` rollup.
+* ``drain="thread"`` gives liveness without traffic: a submitted
+  statement resolves on ``window_timeout`` with NO subsequent
+  submit/poll/result call (observed via the passive ``handle.wait()``).
+* Execution runs OFF the admission lock: submits complete while a drain
+  executes, a slow statement on table A never delays table B, and
+  ``result(timeout=...)`` stays bounded even when another thread's
+  in-flight drain holds the table's drain lock.  The slow statements in
+  these tests are DETERMINISTICALLY slow — an eager (``jit=False``)
+  transition gated on a ``threading.Event`` — never sleeps-and-hopes.
+* ``MaterializedHandle`` is internally locked: concurrent refreshes
+  cannot double-fold a delta, and a mutation racing a fold leaves the
+  handle stale (pinned at the version it actually saw), not wrong.
 """
 
+import gc
 import threading
+import time
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.core import (
     AnalyticsServer, GroupedScanAgg, ScanAgg, Session, Table, execute,
     trace_execution,
 )
+from repro.core.aggregates import MERGE_SUM, Aggregate
+from repro.core.materialize import materialize
 from repro.core.plan import semantic_fingerprint
 from repro.core.templates import ProfileAggregate
 from repro.methods.linregr import LinregrAggregate
@@ -63,6 +89,35 @@ def _bitwise_equal(a, b) -> bool:
     fb = [np.asarray(x) for x in jax.tree.leaves(b)]
     return len(fa) == len(fb) and all(
         x.shape == y.shape and (x == y).all() for x, y in zip(fa, fb))
+
+
+class _GatedAggregate(Aggregate):
+    """A deterministically slow aggregate: its transition blocks on an
+    Event.  Run eagerly (``jit=False`` + ``block_size=None`` -> ONE
+    Python-level ``transition`` call), the gate genuinely stalls the
+    executing drain — no sleeps, no timing guesses."""
+
+    merge_ops = MERGE_SUM
+
+    def __init__(self, started: threading.Event | None = None,
+                 release: threading.Event | None = None):
+        self.started = started    # set when the fold begins executing
+        self.release = release    # the fold waits for this
+
+    def init(self, block):
+        return jnp.zeros((), dtype=jnp.float32)
+
+    def transition(self, state, block, mask):
+        if self.started is not None:
+            self.started.set()
+        if self.release is not None:
+            assert self.release.wait(60), "gated transition never released"
+        return state + jnp.sum(jnp.where(mask, block["y"], 0.0))
+
+
+def _gated_node(table, started=None, release=None):
+    return ScanAgg(_GatedAggregate(started, release), table,
+                   columns=("y",), engine="local", jit=False)
 
 
 @pytest.fixture()
@@ -389,8 +444,37 @@ class TestViewFillers:
         with trace_execution() as t:
             h = other.countmin_sketch(table)
             srv.flush()
-        # answered by the view via a DELTA fold: zero full scans
+        # answered by the view via a DELTA fold: zero full scans, and
+        # the hit says so (refresh kind rides on the trace event)
         assert len(t.scans) == 0 and len(t.deltas) == 1
+        assert t.cache_hits[0].detail["refresh"] == "delta"
+        assert t.admissions[0].detail["scans_saved"] == 1
+        fresh = execute(ScanAgg(CountMinAggregate(4, 1024), table,
+                                columns=("item",)))
+        assert _bitwise_equal(h.result(), fresh)
+        srv.close()
+
+    def test_view_rescan_is_not_a_scan_saved(self, table):
+        # REGRESSION (zero-scans mislabel): after invalidate() the
+        # view's answer performs a FULL RESCAN inside the hit path; the
+        # hit must say refresh="rescan", the scan must be visible in the
+        # trace, and the admission window must NOT count it saved.
+        srv = AnalyticsServer(window_size=64)
+        owner = Session(server=srv)
+        owner.materialize(ScanAgg(CountMinAggregate(4, 1024), table,
+                                  columns=("item",)))
+        table.columns["item"] = jax.numpy.asarray(
+            Draw(9).ints((table.n_rows,), 0, 40))
+        table.invalidate()
+        other = Session(server=srv)
+        with trace_execution() as t:
+            h = other.countmin_sketch(table)
+            srv.flush()
+        hit = t.cache_hits[0].detail
+        assert hit["source"] == "view" and hit["refresh"] == "rescan"
+        assert len(t.scans) == 1            # the rescan is VISIBLE
+        ev = t.admissions[0].detail
+        assert ev["scans_saved"] == 0 and ev["view_rescans"] == 1
         fresh = execute(ScanAgg(CountMinAggregate(4, 1024), table,
                                 columns=("item",)))
         assert _bitwise_equal(h.result(), fresh)
@@ -446,21 +530,25 @@ class TestLifecycle:
         srv.close()
 
     def test_failing_post_fails_only_its_handle(self, table):
-        # a bad post callback must not strand the rest of the window
+        # REGRESSION (cross-handle error leak): submitter B's failing
+        # post callback used to re-raise out of flush() — so submitter
+        # A, who merely triggered the drain, saw B's exception even
+        # though A's own statement resolved fine.  The error belongs to
+        # B's handle ALONE.
         srv = AnalyticsServer(window_size=64)
-        s = Session(server=srv)
-        good = s.linregr(table)
+        sa, sb = Session(server=srv), Session(server=srv)
+        good = sa.linregr(table)
 
         def boom(raw):
             raise ValueError("bad post")
-        bad = s.statement(ScanAgg(FMAggregate(item_col="item"), table,
-                                  columns=("item",)), post=boom)
-        with pytest.raises(ValueError):
-            srv.flush()
+        bad = sb.statement(ScanAgg(FMAggregate(item_col="item"), table,
+                                   columns=("item",)), post=boom)
+        srv.flush()                         # does NOT raise B's error
         assert good.done()
-        good.result()                       # resolved despite the error
-        with pytest.raises(RuntimeError):
+        good.result()                       # A is untouched by B's post
+        with pytest.raises(RuntimeError) as err:
             bad.result(timeout=1)
+        assert isinstance(err.value.__cause__, ValueError)
         srv.close()
 
     def test_result_timeout(self, table):
@@ -475,6 +563,50 @@ class TestLifecycle:
         with pytest.raises(TimeoutError):
             h.result(timeout=0.05)
         srv.close()
+
+    def test_result_timeout_bounded_by_inflight_drain(self):
+        # REGRESSION: result(timeout=t) used to call flush() with no
+        # bound, so it blocked for as long as another thread's in-flight
+        # drain of the same table held the lock — the timeout never even
+        # started.  The deadline must cover lock acquisition + wait.
+        d = Draw(33)
+        ta = _dyadic_table(d, 128)
+        started, release = threading.Event(), threading.Event()
+        srv = AnalyticsServer(window_size=1024)
+        srv.submit(_gated_node(ta, started, release))
+        flusher = threading.Thread(target=srv.flush, daemon=True)
+        flusher.start()
+        assert started.wait(30)             # the drain is executing
+        try:
+            hb = Session(server=srv).linregr(ta)   # same table, pending
+            t0 = time.monotonic()
+            with pytest.raises(TimeoutError):
+                hb.result(timeout=0.3)
+            assert time.monotonic() - t0 < 10.0    # bounded, not stuck
+        finally:
+            release.set()
+        flusher.join(30)
+        hb.result(timeout=30)               # drains fine once unblocked
+        srv.close()
+
+    def test_result_skips_flush_when_done(self, table):
+        # REGRESSION: result() on an ALREADY-RESOLVED handle used to
+        # trigger a demand flush anyway — here that flush would stall on
+        # the gated statement; skipping it returns instantly.
+        srv = AnalyticsServer(window_size=1024)
+        h = srv.submit(ScanAgg(LinregrAggregate(), table,
+                               columns=("x", "y")))
+        srv.flush()
+        assert h.done()
+        release = threading.Event()
+        pending = srv.submit(_gated_node(table, None, release))
+        t0 = time.monotonic()
+        h.result(timeout=0.5)               # no drain: instant
+        assert time.monotonic() - t0 < 5.0
+        assert not pending.done()
+        release.set()
+        srv.close()                         # drains the gated statement
+        assert pending.done()
 
     def test_close_deregisters_hooks(self, table):
         srv = AnalyticsServer(window_size=1)
@@ -514,6 +646,316 @@ class TestLifecycle:
         srv.close()
 
 
+# ---------------------------------------------------------------------------
+# Background drain thread + per-table windows
+# ---------------------------------------------------------------------------
+
+class TestDrainThread:
+    def test_timeout_fires_without_traffic(self, table):
+        # LIVENESS: with drain="thread", a submitted statement resolves
+        # with NO subsequent submit/poll/result call — handle.wait() is
+        # purely passive.
+        srv = AnalyticsServer(window_size=1024, window_timeout=0.05,
+                              drain="thread")
+        s = Session(server=srv)
+        h = s.linregr(table)
+        assert h.wait(30)                   # background drainer fired
+        solo = execute(ScanAgg(LinregrAggregate(), table,
+                               columns=("x", "y")))
+        assert _bitwise_equal(h.result(timeout=1).coef, solo.coef)
+        srv.close()
+
+    def test_count_threshold_drains_in_background(self, table):
+        srv = AnalyticsServer(window_size=2, drain="thread")
+        s1, s2 = Session(server=srv), Session(server=srv)
+        h1 = s1.linregr(table)
+        h2 = s2.countmin_sketch(table)      # hits window_size -> wake
+        assert h1.wait(30) and h2.wait(30)
+        srv.close()
+
+    def test_slow_table_does_not_delay_other_table(self):
+        # PER-TABLE ISOLATION: table A's drain is stuck executing a
+        # gated statement; table B's statement, submitted afterwards,
+        # resolves while A is still blocked.  Asserted structurally
+        # (B done, A not) and from the per-table admission events.
+        d = Draw(31)
+        ta = _dyadic_table(d, 256)
+        tb = _dyadic_table(d, 256)
+        started, release = threading.Event(), threading.Event()
+        srv = AnalyticsServer(window_size=1, drain="thread")
+        try:
+            with trace_execution() as t:
+                ha = srv.submit(_gated_node(ta, started, release))
+                assert started.wait(30)     # A's drain is executing
+                hb = Session(server=srv).linregr(tb)
+                assert hb.wait(30)          # B drains during A's stall
+                assert not ha.done()
+                t_b_done = time.monotonic()
+                release.set()
+                assert ha.wait(30)
+            by_table = {e.detail["table"]: e.detail for e in t.admissions}
+            assert set(by_table) == {id(ta), id(tb)}
+            # B's window drained while A's statement was still executing
+            assert by_table[id(tb)]["drained_at"] < t_b_done
+            summ = t.summary()
+            assert set(summ["by_table"]) == {id(ta), id(tb)}
+            assert summ["by_table"][id(tb)]["windows"] == 1
+        finally:
+            release.set()
+            srv.close()
+
+    def test_submit_nonblocking_during_inflight_drain(self):
+        # a submit — even on the SAME table — returns while that table's
+        # drain is executing; the refill re-check drains it afterwards
+        d = Draw(32)
+        ta = _dyadic_table(d, 256)
+        started, release = threading.Event(), threading.Event()
+        srv = AnalyticsServer(window_size=1, drain="thread")
+        try:
+            srv.submit(_gated_node(ta, started, release))
+            assert started.wait(30)
+            t0 = time.monotonic()
+            h2 = Session(server=srv).linregr(ta)
+            assert time.monotonic() - t0 < 5.0      # admission only
+            assert not h2.done()
+            release.set()
+            assert h2.wait(30)              # drained by the refill loop
+        finally:
+            release.set()
+            srv.close()
+
+    def test_demand_mode_submit_nonblocking_while_flush_executes(self):
+        # same property without the drainer: another thread's flush()
+        # holds table A's drain; submits (A and B) stay non-blocking
+        d = Draw(34)
+        ta, tb = _dyadic_table(d, 128), _dyadic_table(d, 128)
+        started, release = threading.Event(), threading.Event()
+        srv = AnalyticsServer(window_size=1024)
+        srv.submit(_gated_node(ta, started, release))
+        flusher = threading.Thread(target=srv.flush, daemon=True)
+        flusher.start()
+        assert started.wait(30)
+        try:
+            t0 = time.monotonic()
+            sa, sb = Session(server=srv), Session(server=srv)
+            ha, hb = sa.linregr(ta), sb.linregr(tb)
+            assert time.monotonic() - t0 < 5.0
+            hb.result(timeout=30)           # B drains independently
+            assert not ha.done()            # A's drain lock is held
+        finally:
+            release.set()
+        flusher.join(30)
+        ha.result(timeout=30)
+        srv.close()
+
+    def test_poisoned_statement_does_not_kill_drainer(self, table):
+        srv = AnalyticsServer(window_size=1, drain="thread")
+        bad = srv.submit(ScanAgg(LinregrAggregate(), table,
+                                 columns={"x": "missing", "y": "y"}))
+        assert bad.wait(30)
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=1)
+        good = Session(server=srv).linregr(table)   # drainer survived
+        assert good.wait(30)
+        assert srv.stats["drain_errors"] >= 1
+        srv.close()
+
+    def test_close_stops_drainer(self, table):
+        srv = AnalyticsServer(window_size=1024, window_timeout=0.05,
+                              drain="thread")
+        h = Session(server=srv).linregr(table)
+        srv.close()
+        assert h.done()                     # close() drains remainder
+        assert not srv._drainer.is_alive()
+
+
+class TestPerTableWindows:
+    def test_windows_partition_by_table(self):
+        d = Draw(35)
+        ta, tb = _dyadic_table(d, 128), _dyadic_table(d, 128)
+        srv = AnalyticsServer(window_size=3)
+        s = Session(server=srv)
+        s.linregr(ta)
+        s.countmin_sketch(ta)
+        hb = s.linregr(tb)
+        # tb's window holds ONE statement: ta filling ITS window to the
+        # count threshold must not drain tb's
+        ha = s.fm_distinct_count(ta)        # ta hits window_size=3
+        assert ha.done() and not hb.done()
+        assert srv.pending == 1
+        srv.flush()
+        assert hb.done()
+        srv.close()
+
+    def test_per_table_admission_events_and_rollup(self):
+        d = Draw(36)
+        ta, tb = _dyadic_table(d, 128), _dyadic_table(d, 128)
+        srv = AnalyticsServer(window_size=64)
+        s = Session(server=srv)
+        with trace_execution() as t:
+            s.linregr(ta)
+            s.countmin_sketch(ta)
+            s.linregr(tb)
+            srv.flush()
+        assert len(t.admissions) == 2       # one drain event PER TABLE
+        by = t.summary()["by_table"]
+        assert by[id(ta)]["statements"] == 2
+        assert by[id(tb)]["statements"] == 1
+        assert all("latency" in e.detail and "drained_at" in e.detail
+                   for e in t.admissions)
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Size/cost-aware cache admission (GDSF)
+# ---------------------------------------------------------------------------
+
+class TestCachePolicy:
+    def test_byte_budget_holds(self, table):
+        # three float results of ~identical size against a budget that
+        # fits only two -> the resident set stays under budget
+        srv = AnalyticsServer(window_size=1, cache_bytes=100)
+        with srv._lock:
+            for i in range(3):
+                srv._cache_put((i, 0, ("fp",)),
+                               np.zeros(5, np.float64), cost=1.0)  # 40 B
+        assert srv._cache_used <= 100 and len(srv._cache) == 2
+        assert srv.stats["cache_evicted"] == 1
+        srv.close()
+
+    def test_huge_cheap_result_cannot_flush_small_expensive_ones(self):
+        srv = AnalyticsServer(cache_bytes=1000)
+        with srv._lock:
+            for i in range(10):             # 10 small, expensive entries
+                srv._cache_put((i, 0, ("small",)),
+                               np.zeros(1, np.float64), cost=1e6)
+            # one huge CHEAP result: admitting it must not evict the
+            # valuable small set — GDSF evicts the lowest cost/byte
+            # priority first, which is the giant itself
+            srv._cache_put((99, 0, ("huge",)),
+                           np.zeros(120, np.float64), cost=1.0)
+        assert all((i, 0, ("small",)) in srv._cache for i in range(10))
+        assert (99, 0, ("huge",)) not in srv._cache
+        srv.close()
+
+    def test_oversized_result_rejected_outright(self):
+        srv = AnalyticsServer(cache_bytes=64)
+        with srv._lock:
+            srv._cache_put((0, 0, ("big",)), np.zeros(100, np.float64))
+        assert len(srv._cache) == 0
+        assert srv.stats["cache_rejected"] == 1
+        srv.close()
+
+    def test_entry_count_bound_still_holds(self, table):
+        srv = AnalyticsServer(cache_entries=2)
+        with srv._lock:
+            for i in range(5):
+                srv._cache_put((i, 0, ("fp",)), np.zeros(1, np.float64))
+        assert len(srv._cache) <= 2
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Weak table hooks — a long-lived server must not pin dead tables
+# ---------------------------------------------------------------------------
+
+class TestWeakHooks:
+    def test_dead_table_auto_purges(self):
+        # REGRESSION (strong-ref leak): the server used to hold hooked
+        # tables forever; now a collected table's hook, cache entries
+        # and window vanish with it — and because entries die WITH the
+        # table, a recycled id() can never match a stale cache key.
+        srv = AnalyticsServer(window_size=1)
+        tbl = _dyadic_table(Draw(13), 128)
+        tid = id(tbl)
+        Session(server=srv).linregr(tbl)    # drains + fills the cache
+        assert tid in srv._hooked
+        assert any(k[0] == tid for k in srv._cache)
+        del tbl
+        gc.collect()
+        assert tid not in srv._hooked
+        assert not any(k[0] == tid for k in srv._cache)
+        assert tid not in srv._windows
+        srv.close()
+
+    def test_live_table_keeps_hook_and_cache(self, table):
+        srv = AnalyticsServer(window_size=1)
+        Session(server=srv).linregr(table)
+        gc.collect()
+        assert id(table) in srv._hooked     # weak, but alive
+        with trace_execution() as t:
+            Session(server=srv).linregr(table)
+        assert len(t.cache_hits) == 1       # cache survives gc
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# MaterializedHandle thread safety
+# ---------------------------------------------------------------------------
+
+class TestMaterializeThreadSafety:
+    def _gated_run_local(self, monkeypatch, started, release):
+        import importlib
+        mat = importlib.import_module("repro.core.materialize")
+        real = mat.run_local
+
+        def gated(*args, **kwargs):
+            started.set()
+            assert release.wait(60)
+            return real(*args, **kwargs)
+        monkeypatch.setattr(mat, "run_local", gated)
+
+    def test_concurrent_refresh_folds_delta_once(self, monkeypatch):
+        # REGRESSION: two concurrent refreshes used to BOTH pass the
+        # version check and fold the same delta twice (double-merge).
+        # With the internal lock: exactly ONE delta fold.
+        d = Draw(17)
+        tbl = _dyadic_table(d, 256)
+        h = materialize(ScanAgg(CountMinAggregate(4, 1024), tbl,
+                                columns=("item",)))
+        started, release = threading.Event(), threading.Event()
+        self._gated_run_local(monkeypatch, started, release)
+        tbl.append(_delta_cols(d, 64))
+        with trace_execution() as t:
+            threads = [threading.Thread(target=h.result)
+                       for _ in range(2)]
+            for th in threads:
+                th.start()
+            assert started.wait(30)         # first refresh inside fold
+            release.set()
+            for th in threads:
+                th.join(30)
+        assert len(t.deltas) == 1           # second refresh was a noop
+        fresh = execute(ScanAgg(CountMinAggregate(4, 1024), tbl,
+                                columns=("item",)))
+        assert _bitwise_equal(h.result(), fresh)
+
+    def test_delta_vs_rescan_race_stays_correct(self, monkeypatch):
+        # an invalidate() landing WHILE a delta fold executes: the delta
+        # pins the version it observed (stale), so the next read rescans
+        # — never a delta merged on top of rows it did not see
+        d = Draw(19)
+        tbl = _dyadic_table(d, 256)
+        h = materialize(ScanAgg(CountMinAggregate(4, 1024), tbl,
+                                columns=("item",)))
+        started, release = threading.Event(), threading.Event()
+        self._gated_run_local(monkeypatch, started, release)
+        tbl.append(_delta_cols(d, 64))
+        refresher = threading.Thread(target=h.refresh, daemon=True)
+        refresher.start()
+        assert started.wait(30)             # delta fold in flight ...
+        tbl.columns["item"] = jax.numpy.asarray(
+            d.ints((tbl.n_rows,), 0, 40))
+        tbl.invalidate()                    # ... and the table moves
+        release.set()
+        refresher.join(30)
+        assert h.stale()                    # pinned at the OLD version
+        assert h.refresh() == "rescan"
+        fresh = execute(ScanAgg(CountMinAggregate(4, 1024), tbl,
+                                columns=("item",)))
+        assert _bitwise_equal(h.result(), fresh)
+
+
 class _NeverFlush:
-    def flush(self):
+    def flush(self, timeout=None):
         return 0
