@@ -9,6 +9,9 @@
 #                        (pass count + wall time) vs scan-per-aggregate
 #   bench_plan        — §3.2 declarative batches: planned (scan-sharing
 #                        optimizer) vs naive per-statement execution
+#   bench_join        — star-schema joined GROUP BY: shared-sort
+#                        sort-merge join vs per-statement
+#                        gather-materialize
 #   bench_ivm         — §4.1 merge combinators as incremental view
 #                        maintenance: delta-fold refresh vs full rescan
 #   bench_serve       — §3.2 serving: cross-session admission-window
@@ -26,7 +29,7 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_ivm, bench_linregr, bench_iterative, \
+    from . import bench_ivm, bench_join, bench_linregr, bench_iterative, \
         bench_plan, bench_profile, bench_serve, bench_sgd_models, \
         bench_text, roofline
 
@@ -35,6 +38,7 @@ def main() -> None:
         ("bench_iterative", bench_iterative.run),
         ("bench_profile", bench_profile.run),
         ("bench_plan", bench_plan.run),
+        ("bench_join", bench_join.run),
         ("bench_ivm", bench_ivm.run),
         ("bench_serve", bench_serve.run),
         ("bench_sgd_models", bench_sgd_models.run),

@@ -87,6 +87,36 @@ def main():
     qs = quantiles(tbl.with_column("v", tbl["y"]), [0.25, 0.5, 0.75])
     print("\ny quartiles:", [round(float(q), 3) for q in qs])
 
+    # -- 6. star schema: fact JOIN dim GROUP BY dim.attr ------------------
+    # The join resolves device-side (sort-merge against the memoized
+    # dimension key sort) into one fact-aligned group-id column — the
+    # dimension is never materialized onto fact rows, and the batch
+    # below runs as ONE fused pass with ONE shared sort.
+    from repro.core import Join, ProfileAggregate
+    from repro.methods.linregr import LinregrAggregate
+
+    key, sk, ak = jax.random.split(key, 3)
+    store_ids = jnp.arange(64, dtype=jnp.int32) * 7 + 3   # sparse keys
+    stores = Table.from_columns({
+        "store_id": store_ids,
+        "region": jax.random.randint(ak, (64,), 0, 8).astype(jnp.int32)})
+    sales = tbl.with_column(
+        "store_fk", store_ids[jax.random.randint(sk, (tbl.n_rows,), 0, 64)])
+
+    sess = Session()
+    per_region = Join(sales, stores, "store_fk", "store_id", "region")
+    h_lr = sess.joined_grouped_scan(LinregrAggregate(), per_region,
+                                    columns={"x": "x", "y": "y"})
+    h_pf = sess.joined_grouped_scan(ProfileAggregate(), per_region,
+                                    columns=("y",))
+    print("\n== EXPLAIN (star-schema joined GROUP BY) ==")
+    print(sess.explain())
+    sess.run()
+    print("per-region r2:",
+          [round(float(r), 3) for r in h_lr.result().r2])
+    print("per-region mean y:",
+          [round(float(m), 3) for m in h_pf.result()["y"]["mean"]])
+
 
 if __name__ == "__main__":
     main()

@@ -2,11 +2,18 @@
 
 The stack is declarative-over-unified (§3.2; Feng et al.): methods emit
 **logical plan nodes** (:mod:`repro.core.plan` — ``ScanAgg``,
-``GroupedScanAgg``, ``IterativeFit``, ``StreamAgg``) and the planner
-fuses compatible statements into shared scans, dedups partitioning sorts
-through the memoized ``Table.group_by``, and picks engines cost-based
-from the capability matrix (``ENGINE_CAPS``, below) — ``explain()``
-renders the chosen physical plan like ``EXPLAIN``.  :class:`Session`
+``GroupedScanAgg``, ``JoinedGroupedScanAgg``, ``IterativeFit``,
+``StreamAgg``) and the planner fuses compatible statements into shared
+scans, dedups partitioning sorts through the memoized
+``Table.group_by`` (and, one level down, ``Table.sort_permutation`` —
+the hoisted argsort that GROUP BY and the star-schema join layer
+share), and picks engines cost-based from the capability matrix
+(``ENGINE_CAPS``, below) — ``explain()`` renders the chosen physical
+plan like ``EXPLAIN``.  Star-schema workloads go through
+:class:`~repro.core.join.Join` (:mod:`repro.core.join`): a device-side
+sort-merge equi-join resolves ``fact JOIN dim GROUP BY dim.attr`` to a
+single fact-aligned group-id column feeding the unchanged grouped
+core — the dimension is never materialized onto fact rows.  :class:`Session`
 is the analyst front-end: batch statements, explain, run.  Retained
 statements become *living views* (:func:`materialize` /
 ``Session.materialize``): a :class:`MaterializedHandle` pins the table
@@ -152,10 +159,12 @@ from .convex import (
     sgd,
 )
 from .templates import ProfileAggregate, map_columns, one_hot_encode
+from .join import Join, JoinResolution
 from .plan import (
     ENGINE_CAPS,
     GroupedScanAgg,
     IterativeFit,
+    JoinedGroupedScanAgg,
     PhysicalPlan,
     ScanAgg,
     StreamAgg,
@@ -169,8 +178,9 @@ from .session import Handle, Session
 from .trace import Trace, trace_execution
 
 __all__ = [
-    "ENGINE_CAPS", "ScanAgg", "GroupedScanAgg", "IterativeFit",
-    "StreamAgg", "PhysicalPlan", "plan", "execute", "explain",
+    "ENGINE_CAPS", "ScanAgg", "GroupedScanAgg", "JoinedGroupedScanAgg",
+    "IterativeFit", "StreamAgg", "PhysicalPlan", "plan", "execute",
+    "explain", "Join", "JoinResolution",
     "Session", "Handle", "Trace", "trace_execution",
     "MaterializedHandle", "materialize",
     "AnalyticsServer", "ServerHandle",

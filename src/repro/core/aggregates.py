@@ -722,7 +722,13 @@ def run_grouped(agg: Aggregate, table, group_col: str | None = None,
     ``table`` is either a :class:`Table` — grouped by its ``group_col``
     column — or a prebuilt :class:`~repro.core.table.GroupedView`
     (``group_col`` ignored), so multi-pass grouped methods pay the
-    partitioning sort once and share it across scans.
+    partitioning sort once and share it across scans.  Star-schema
+    joined aggregation reaches this engine UNCHANGED: the join layer
+    (:mod:`repro.core.join`) resolves ``fact JOIN dim`` to a fact-
+    aligned integer group-id column and this function grouped-scans it
+    like any other key — out-of-range ids (``-1`` for dropped dangling
+    foreign keys) fall outside every segment by :meth:`Table.group_by`'s
+    documented semantics.
 
     Two execution strategies share the engine:
 

@@ -1,0 +1,225 @@
+"""Device-side sort-merge equi-join — star-schema GROUP BY without
+materializing the joined table.
+
+The canonical in-database analytics workload (MADlib's own motivating
+setting) is a fact table joined to a small dimension and aggregated by a
+dimension attribute::
+
+    SELECT dim.attr, agg(fact.cols...)
+    FROM fact JOIN dim ON fact.fk = dim.key
+    GROUP BY dim.attr
+
+Feng et al.'s unified-architecture bet applies here too: the join must
+FEED the existing aggregate/segment machinery, not sidestep it with a
+gathered copy of the dimension's columns on every fact row (which
+doubles memory traffic and breaks scan fusion).  So a :class:`Join` is
+resolved to exactly ONE new column — a fact-aligned ``int32`` group-id
+vector — and everything downstream is the unchanged grouped core:
+
+* the dimension side pays ONE memoized stable argsort of its key column
+  (:meth:`Table.sort_permutation` — shared with any GROUP BY over the
+  same key);
+* fact foreign keys are ``searchsorted`` against the sorted dimension
+  keys (device-side sort-merge key resolution); the matched row's
+  ``attr`` value IS the group id, so duplicate attr values across
+  dimension rows collapse into one group exactly like SQL's
+  ``GROUP BY dim.attr``;
+* dangling foreign keys follow the explicit ``on_missing=`` policy:
+  ``"error"`` raises loudly with the dangling count, ``"drop"`` assigns
+  the sentinel id ``-1`` — out of range for every segment by
+  :meth:`Table.group_by`'s documented semantics, so dropped rows vanish
+  from every group without a separate mask;
+* duplicate dimension KEYS are always rejected loudly (an equi-join
+  against a non-unique key is a fan-out, not a dimension lookup);
+* the resolved ``fact + gid`` table routes straight into
+  ``run_grouped`` / ``fit_grouped``, bit-identical to a
+  materialize-then-aggregate oracle for exact-state aggregates (same
+  gid sequence -> same stable partition permutation -> same blocked
+  fold).
+
+Resolution is memoized per ``(fact, dim, fact_key, dim_key, attr_col,
+on_missing)`` and stamped with BOTH tables' versions, so every joined
+statement over one star triple shares one resolution — and through the
+shared joined table, one fact-side partitioning sort.  On a distributed
+fact the dimension's sorted key/attr columns are replicated across the
+mesh (:func:`repro.distributed.sharding.replicate`) while fact blocks
+stay row-sharded, so the sharded grouped engine works unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .table import Table
+from .trace import record
+
+__all__ = ["Join", "JoinResolution", "JOIN_GID_COL"]
+
+# The resolved group-id column spliced onto the fact table.  Internal to
+# the join layer: methods never reference it (CI enforces this) — they
+# hand a Join to the plan layer and the grouped core sees an ordinary
+# integer group column.
+JOIN_GID_COL = "__join_gid__"
+
+_ON_MISSING = ("error", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinResolution:
+    """Outcome of resolving a :class:`Join`: the fact table extended with
+    the fact-aligned group-id column (``table[gid_col]``), ready for
+    ``group_by(gid_col, num_groups)``.  ``dangling`` counts fact rows
+    whose foreign key matched no dimension row (only ever non-zero under
+    ``on_missing="drop"``)."""
+
+    table: Table
+    gid_col: str
+    num_groups: int
+    dangling: int
+
+
+@dataclasses.dataclass(eq=False)
+class Join:
+    """Logical equi-join spec: ``fact JOIN dim ON fact[fact_key] ==
+    dim[dim_key]``, grouping by the dimension attribute ``attr_col``
+    (an integer column on ``dim``, the usual group-id contract).
+
+    A Join is cheap to construct and carries no device state; the work
+    happens in :meth:`resolve`, which is memoized across Join instances
+    — two Joins over the same ``(fact, dim, keys, attr, on_missing)``
+    share one resolution, which is what lets the planner fuse joined
+    statements built independently by different sessions.
+    """
+
+    fact: Table
+    dim: Table
+    fact_key: str
+    dim_key: str
+    attr_col: str
+    on_missing: str = "error"   # "error" | "drop"
+
+    def __post_init__(self):
+        if self.on_missing not in _ON_MISSING:
+            raise ValueError(
+                f"Join: on_missing={self.on_missing!r} — expected one of "
+                f"{_ON_MISSING} (an implicit policy for dangling foreign "
+                f"keys would silently change results)")
+        for table, col, side in ((self.fact, self.fact_key, "fact"),
+                                 (self.dim, self.dim_key, "dim"),
+                                 (self.dim, self.attr_col, "dim")):
+            if col not in table.columns:
+                raise KeyError(
+                    f"Join: column {col!r} not on the {side} table "
+                    f"(has {sorted(table.columns)})")
+
+    # -- identity ----------------------------------------------------------
+    def spec_key(self) -> tuple:
+        """Fusion/memo identity: two Joins with equal spec keys resolve
+        to the same joined table (tables by object identity, like every
+        plan-layer fusion key)."""
+        return (id(self.fact), id(self.dim), self.fact_key, self.dim_key,
+                self.attr_col, self.on_missing)
+
+    def attr_groups(self) -> int:
+        """Group count of the join's GROUP BY: ``max(dim.attr) + 1``
+        (0 for an empty dimension).  Cheap — the dimension is small —
+        and safe to call at plan/explain time without resolving."""
+        if self.dim.n_rows == 0:
+            return 0
+        attr = self.dim[self.attr_col].astype(jnp.int32)
+        return int(jax.device_get(jnp.max(attr))) + 1
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self) -> JoinResolution:
+        """Sort-merge key resolution, memoized on both tables' versions.
+
+        Returns the fact table extended with ONE ``int32`` column
+        (:data:`JOIN_GID_COL`): each fact row's matched dimension row's
+        ``attr`` value, or ``-1`` for a dangling key under
+        ``on_missing="drop"``.  The dimension's columns are never
+        gathered onto fact rows.  A memo miss records one ``kind="join"``
+        trace event; hits are silent — "the resolution is shared" is
+        asserted from these counts, never from timing.
+        """
+        key = self.spec_key()
+        hit = _RESOLUTIONS.get(key)
+        if hit is not None and hit[0] is self.fact and hit[1] is self.dim \
+                and hit[2] == self.fact.version \
+                and hit[3] == self.dim.version:
+            return hit[4]
+        res = self._resolve_uncached()
+        if len(_RESOLUTIONS) >= _RESOLUTIONS_MAX:
+            _RESOLUTIONS.pop(next(iter(_RESOLUTIONS)))
+        # pin both tables so their ids cannot be recycled into this key
+        _RESOLUTIONS[key] = (self.fact, self.dim, self.fact.version,
+                             self.dim.version, res)
+        return res
+
+    def _resolve_uncached(self) -> JoinResolution:
+        n_fact, n_dim = self.fact.n_rows, self.dim.n_rows
+        record("join", fact=id(self.fact), dim=id(self.dim),
+               fact_rows=n_fact, dim_rows=n_dim,
+               on=f"{self.fact_key}={self.dim_key}", attr=self.attr_col)
+        fk = self.fact[self.fact_key]
+        if n_dim == 0:
+            if self.on_missing == "error":
+                raise ValueError(
+                    f"Join: empty dimension — every foreign key of "
+                    f"{self.fact_key!r} is dangling ({n_fact} rows); "
+                    "use on_missing='drop' to aggregate over no groups")
+            gids = jnp.full((n_fact,), -1, jnp.int32)
+            return self._finish(gids, num_groups=0, dangling=n_fact)
+
+        # One shared argsort of the dimension key (the group_by memo's
+        # sort, if anyone grouped the dimension by this key already).
+        sorted_keys, perm = self.dim.sort_permutation(self.dim_key)
+        if n_dim > 1 and bool(jax.device_get(
+                jnp.any(sorted_keys[1:] == sorted_keys[:-1]))):
+            raise ValueError(
+                f"Join: duplicate keys in dim[{self.dim_key!r}] — an "
+                "equi-join against a non-unique dimension key is a "
+                "fan-out, not a dimension lookup; deduplicate the "
+                "dimension first")
+        sorted_attr = self.dim[self.attr_col][perm].astype(jnp.int32)
+        num_groups = int(jax.device_get(sorted_attr.max())) + 1
+
+        if self.fact.mesh is not None:
+            # Broadcast side of the star: the small sorted key/attr
+            # arrays replicate across the fact's mesh, fact foreign keys
+            # stay row-sharded — the searchsorted/gather below then
+            # needs no cross-device data movement for fact rows.
+            from ..distributed.sharding import replicate
+            sorted_keys = replicate(self.fact.mesh, sorted_keys)
+            sorted_attr = replicate(self.fact.mesh, sorted_attr)
+
+        pos = jnp.clip(jnp.searchsorted(sorted_keys, fk), 0, n_dim - 1)
+        matched = sorted_keys[pos] == fk
+        dangling = int(jax.device_get(jnp.sum(~matched)))
+        if dangling and self.on_missing == "error":
+            raise ValueError(
+                f"Join: {dangling} of {n_fact} fact rows have foreign "
+                f"keys ({self.fact_key!r}) matching no dim[{self.dim_key!r}] "
+                "row; fix the data or pass on_missing='drop' to exclude "
+                "them from every group")
+        gids = jnp.where(matched, sorted_attr[pos], jnp.int32(-1))
+        return self._finish(gids, num_groups=num_groups, dangling=dangling)
+
+    def _finish(self, gids: jax.Array, *, num_groups: int, dangling: int
+                ) -> JoinResolution:
+        # with_column re-places the gid column with the fact's row
+        # sharding and returns a FRESH table (empty memo caches), so the
+        # joined table's own partitioning sort is shared by every
+        # statement that reaches it through the resolution memo.
+        joined = self.fact.with_column(JOIN_GID_COL, gids)
+        return JoinResolution(joined, JOIN_GID_COL, num_groups, dangling)
+
+
+# spec key -> (fact, dim, fact_version, dim_version, JoinResolution).
+# Module-level (Joins are throwaway specs; the memo must outlive them),
+# bounded FIFO, entries pin their tables exactly like plan._PROJECTED_CACHE
+# pins its aggregates.
+_RESOLUTIONS: dict[tuple, tuple] = {}
+_RESOLUTIONS_MAX = 64

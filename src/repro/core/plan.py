@@ -20,6 +20,13 @@ and instead emit **logical plan nodes**; the planner then
 * **dedups sorts** — grouped passes resolve their :class:`GroupedView`
   through the memoized :meth:`Table.group_by`, so N grouped statements
   (and ``fit_grouped``) over one key pay ONE partitioning sort;
+* **fuses joined statements** — :class:`JoinedGroupedScanAgg` statements
+  over one ``(fact, dim, key, attr)`` star triple share ONE device-side
+  sort-merge key resolution (:class:`~repro.core.join.Join`, memoized)
+  and ONE segment scan; the cost model prices the sort-share strategy
+  against gather-materializing the dimension onto fact rows
+  (:func:`join_cost`), and ``explain()`` renders the join and its
+  shared sort;
 * **selects engines cost-based** — candidates come from
   :data:`ENGINE_CAPS` (the capability matrix) filtered by what the
   statement needs (mask? group_by? fit? stream?), ranked by a row-cost
@@ -60,7 +67,9 @@ from .aggregates import (
 from .iterative import (
     IterativeTask, _segment_task_ok, fit, fit_grouped, fit_stream,
 )
+from .join import Join
 from .table import Columns, GroupedView, Table
+from .trace import record as _record
 
 # ---------------------------------------------------------------------------
 # The capability matrix — which cross-cutting features each engine honors.
@@ -134,6 +143,36 @@ class GroupedScanAgg:
 
 
 @dataclasses.dataclass(eq=False)
+class JoinedGroupedScanAgg:
+    """Grouped aggregate over an equi-join (``SELECT dim.attr, agg(...)
+    FROM fact JOIN dim GROUP BY dim.attr``) — the first multi-table
+    statement.
+
+    ``join`` is a :class:`~repro.core.join.Join` spec; the planner
+    resolves it via the memoized device-side sort-merge (one dimension
+    key argsort + one searchsorted, producing a fact-aligned group-id
+    column) and routes the result through the ordinary grouped core —
+    the dimension's columns are never materialized onto fact rows.
+    Statements over one (fact, dim, key, attr) triple fuse into ONE
+    pass; ``num_groups`` defaults to ``max(dim.attr) + 1``.  ``mask``
+    (like ``columns``) is in FACT row order — the joined table is
+    fact-row-aligned.
+    """
+
+    agg: Aggregate
+    join: Join
+    num_groups: int | None = None
+    columns: Any = None          # Projection (of the fact's columns)
+    mask: Any = None             # base row filter, fact row order
+    block_size: int | None = None
+    method: str = "auto"         # "auto" | "segment" | "masked"
+    mesh: Any = None             # None -> the fact table's mesh
+    row_axes: Any = None
+    jit: bool = True
+    label: str | None = None
+
+
+@dataclasses.dataclass(eq=False)
 class IterativeFit:
     """Iterative model fit (the §3.1.2 driver pattern as a statement).
 
@@ -178,7 +217,8 @@ class StreamAgg:
     label: str | None = None
 
 
-Node = "ScanAgg | GroupedScanAgg | IterativeFit | StreamAgg"
+Node = ("ScanAgg | GroupedScanAgg | JoinedGroupedScanAgg | IterativeFit"
+        " | StreamAgg")
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +387,26 @@ def grouped_cost(method: str, rows: int, groups: int, block: int,
     return float(base)
 
 
+def join_cost(strategy: str, fact_rows: int, dim_rows: int) -> float:
+    """Estimated rows-moved cost of resolving ``fact ⋈ dim`` (on top of
+    the grouped pass that consumes it).
+
+    ``sort-share`` is the planned strategy: one argsort of the dimension
+    key (amortized to its row count — and FREE when a GROUP BY already
+    paid it, via the ``sort_permutation`` memo) plus one searchsorted
+    gather producing a single int32 gid column over the fact rows.
+    ``gather-materialize`` is the naive alternative it is priced
+    against: gather the dimension attribute onto every fact row AND
+    write a fresh joined copy of the fact columns — 2x the fact's rows
+    moved, plus the same dimension sort, with no sort/scan sharing
+    downstream (every statement re-pays it)."""
+    if strategy == "sort-share":
+        return float(fact_rows + dim_rows)
+    if strategy == "gather-materialize":
+        return float(2 * fact_rows + dim_rows)
+    raise ValueError(f"join_cost: unknown strategy {strategy!r}")
+
+
 def _capable(engine: str, *, mask: bool = False, group_by: bool = False,
              stream: bool = False) -> bool:
     """Capability-matrix filter: can ``engine`` honor what the statement
@@ -427,6 +487,23 @@ def _mask_key(mask) -> Any:
     return None if mask is None else id(mask)
 
 
+def node_tables(node) -> tuple[Table, ...]:
+    """Every base :class:`Table` a statement READS — the structural
+    multi-table check behind the result cache's single-table contract.
+    A join reads two (fact first — the admission/windowing table); a
+    prebuilt GroupedView resolves to its data table; streams read none.
+    Any future multi-table node must surface all of its tables here, so
+    the cache rejection in :func:`semantic_fingerprint` is inherited
+    instead of re-discovered."""
+    join = getattr(node, "join", None)
+    if join is not None:
+        return (join.fact, join.dim)
+    t = getattr(node, "table", None)
+    if isinstance(t, GroupedView):
+        t = t.table
+    return (t,) if isinstance(t, Table) else ()
+
+
 def statement_fingerprint(node) -> tuple:
     """Stable identity of a retained statement's physical shape — what a
     :class:`~repro.core.materialize.MaterializedHandle` pins alongside
@@ -470,9 +547,25 @@ def semantic_fingerprint(node) -> tuple | None:
     cannot be identified semantically: an aggregate without a
     ``cache_key``, a masked statement (masks are session-local arrays,
     identity-keyed), a prebuilt :class:`GroupedView` (a snapshot with no
-    version to track), or a non-scan statement (fits and streams hold no
-    cacheable table-version-addressed result).
+    version to track), a non-scan statement (fits and streams hold no
+    cacheable table-version-addressed result), or — checked structurally
+    via :func:`node_tables`, so future multi-table nodes inherit it — a
+    statement reading MORE THAN ONE table.  The single-table restriction
+    is a correctness wall, not a limitation to lift casually: the
+    fingerprint is computed at SUBMIT time while the server probes its
+    cache at DRAIN time against the base table's current version only,
+    so version-keying a join on both tables at submit could still serve
+    a result after the dimension alone mutated in between.  The refusal
+    records a loud ``kind="cache_reject"`` trace event per statement
+    (joined statements still execute — windowed by their fact table —
+    they are just never cached or deduplicated).
     """
+    tables = node_tables(node)
+    if len(tables) > 1:
+        _record("cache_reject", reason="multi-table",
+                node=type(node).__name__,
+                tables=tuple(id(t) for t in tables))
+        return None
     if not isinstance(node, (ScanAgg, GroupedScanAgg)):
         return None
     agg_key = node.agg.cache_key()
@@ -656,6 +749,89 @@ def fused_grouped_pass(members: Sequence[tuple[int, GroupedScanAgg]]
         run=run)
 
 
+def fused_join_pass(members: Sequence[tuple[int, "JoinedGroupedScanAgg"]]
+                    ) -> PhysicalPass:
+    """ONE joined-grouped pass — shared sort-merge key resolution + one
+    partitioned segment scan — for compatible joined statements (the
+    planner's first multi-table fusion).  Same loud-rejection contract
+    as :func:`fused_grouped_pass`; join compatibility means the SAME
+    (fact, dim, fact_key, dim_key, attr, on_missing) spec, compared by
+    table identity like every fusion key."""
+    nodes = [n for _, n in members]
+    base = nodes[0]
+    j = base.join
+    if any(n.join.spec_key() != j.spec_key() for n in nodes):
+        raise ValueError(
+            "fused_join_pass: statements join different (fact, dim, key, "
+            "attr) triples — cross-join fusion would mix unrelated "
+            "group-id columns")
+    if len({_mask_key(n.mask) for n in nodes}) > 1:
+        raise ValueError(
+            "fused_join_pass: mixed-mask fusion rejected — one base mask "
+            "applies to every fused joined aggregate")
+    if len({(n.num_groups, n.block_size, n.method, id(n.mesh), n.jit)
+            for n in nodes}) > 1:
+        raise ValueError("fused_join_pass: members disagree on "
+                         "num_groups/block_size/method/mesh/jit")
+
+    mesh = base.mesh if base.mesh is not None else j.fact.mesh
+    segs = _mesh_segments(mesh, base.row_axes or j.fact.row_axes)
+    groups = int(base.num_groups) if base.num_groups is not None \
+        else j.attr_groups()
+    rows = j.fact.n_rows
+
+    # Segment reducibility is probed on the FACT's columns — the joined
+    # table is exactly them plus the (stripped-at-group_by) gid column.
+    member_aggs = [_member_agg(n) for n in nodes]
+    segment_ok = True
+    for a in member_aggs:
+        try:
+            ok = probe_segment_ops(a, dict(j.fact.columns)) is not None
+        except Exception:
+            ok = False
+        segment_ok = segment_ok and ok
+    method, costs, source = select_grouped_method(
+        rows, groups, segment_ok=segment_ok, block_size=base.block_size,
+        segs=segs, mask=base.mask is not None, forced=base.method,
+        agg_cls=_agg_cost_class(member_aggs))
+
+    join_costs = {s: join_cost(s, rows, j.dim.n_rows)
+                  for s in ("sort-share", "gather-materialize")}
+    # candidate costs include the key-resolution term, so the pass cost
+    # equals its chosen candidate and explain's rejected-list stays honest
+    costs = {m: c + join_costs["sort-share"] for m, c in costs.items()}
+    engine = ("sharded-grouped[%s]" % method) if mesh is not None \
+        else f"grouped-{method}"
+    idx = [i for i, _ in members]
+    projections = [_normalize_projection(n.columns) for n in nodes]
+
+    def run():
+        res = j.resolve()
+        view = res.table.group_by(res.gid_col, groups)
+        if all(p is not None for p in projections):
+            union = sorted({src for p in projections for src in p.values()})
+            view = view.select(*union)
+        fused = _fused_for(member_aggs)
+        out = run_grouped(fused, view, block_size=base.block_size,
+                          mask=base.mask, method=method, mesh=base.mesh,
+                          row_axes=base.row_axes, jit=base.jit)
+        return dict(zip(idx, out))
+
+    return PhysicalPass(
+        kind="join", engine=engine, members=list(members),
+        cost=costs[method],
+        info={"table": j.fact, "group_col": j.attr_col, "groups": groups,
+              "rows": rows, "mask": base.mask, "costs": costs,
+              "cost_source": source,
+              "join": {"dim": j.dim, "on": f"{j.fact_key}={j.dim_key}",
+                       "on_missing": j.on_missing, "costs": join_costs},
+              # one logical partitioning sort per star triple: joined
+              # passes over the same spec share it (and explain counts
+              # it once), exactly like grouped passes share a view_key
+              "view_key": ("join",) + j.spec_key()},
+        run=run)
+
+
 def _fit_pass(index: int, node: IterativeFit) -> PhysicalPass:
     run_layout = node.layout  # what run() hands to fit_grouped
     if node.blocks is not None:
@@ -768,9 +944,13 @@ class PhysicalPlan:
                 return "-"
             return tables.setdefault(id(tbl), f"t{len(tables)}")
 
-        # label tables in statement order for stable goldens
+        # label tables in statement order for stable goldens (a join
+        # pass names its dimension right after its fact)
         for p in self.passes:
             tname(p.info.get("table"))
+            join = p.info.get("join")
+            if join is not None:
+                tname(join["dim"])
 
         shared_sorts = {}
         for p in self.passes:
@@ -791,6 +971,12 @@ class PhysicalPlan:
             bits = [f"pass {k}: {_KIND_NAMES[p.kind]} [{p.engine}]"]
             if info.get("table") is not None:
                 bits.append(tname(info["table"]))
+            join = info.get("join")
+            if join is not None:
+                bits.append(f"JOIN {tname(join['dim'])} "
+                            f"on {join['on']}"
+                            + (f" on_missing={join['on_missing']}"
+                               if join["on_missing"] != "error" else ""))
             if info.get("group_col"):
                 bits.append(f"by {info['group_col']} "
                             f"groups={info['groups']}")
@@ -821,6 +1007,13 @@ class PhysicalPlan:
                     bits.append("(rejected: " + " ".join(
                         f"{e}={_fmt_cost(c, measured)}" for e, c in sorted(
                             rejected.items())) + ")")
+                if join is not None:
+                    jc = join["costs"]
+                    bits.append(
+                        "(join: sort-share="
+                        f"{_fmt_cost(jc['sort-share'], False)} rejected "
+                        "gather-materialize="
+                        f"{_fmt_cost(jc['gather-materialize'], False)})")
             lines.append("  " + " ".join(bits))
             for i, n in p.members:
                 label = n.label or f"s{i}"
@@ -831,7 +1024,8 @@ class PhysicalPlan:
 
 
 _KIND_NAMES = {"scan": "shared-scan", "grouped": "grouped-scan",
-               "fit": "fit", "stream": "stream-scan"}
+               "join": "join-grouped-scan", "fit": "fit",
+               "stream": "stream-scan"}
 
 
 def _fmt_cost(c: float, measured: bool) -> str:
@@ -858,6 +1052,16 @@ def plan(statements: Sequence[Any]) -> PhysicalPlan:
                    node.num_groups, _mask_key(node.mask), node.block_size,
                    node.method, id(node.mesh) if node.mesh is not None
                    else None, node.jit)
+        elif isinstance(node, JoinedGroupedScanAgg):
+            # multi-table fusion: keyed on the join SPEC (both tables by
+            # identity + keys/attr/policy), so joined statements built
+            # independently — even with distinct Join instances — fuse
+            # into one shared-resolution pass
+            key = (("join",) + node.join.spec_key()
+                   + (node.num_groups, _mask_key(node.mask),
+                      node.block_size, node.method,
+                      id(node.mesh) if node.mesh is not None else None,
+                      node.jit))
         elif isinstance(node, StreamAgg):
             key = ("stream", id(node.blocks))
         elif isinstance(node, IterativeFit):
@@ -876,6 +1080,8 @@ def plan(statements: Sequence[Any]) -> PhysicalPlan:
             passes.append(fused_scan_pass(members))
         elif kind == "grouped":
             passes.append(fused_grouped_pass(members))
+        elif kind == "join":
+            passes.append(fused_join_pass(members))
         elif kind == "stream":
             passes.append(fused_stream_pass(members))
         else:

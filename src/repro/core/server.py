@@ -103,8 +103,11 @@ from typing import Any, Callable
 
 import jax
 
-from .plan import GroupedScanAgg, ScanAgg, plan, semantic_fingerprint
-from .table import GroupedView, Table
+from .plan import (
+    GroupedScanAgg, JoinedGroupedScanAgg, ScanAgg, plan,
+    semantic_fingerprint, node_tables as _node_tables,
+)
+from .table import Table
 from .trace import record as _record
 
 __all__ = ["AnalyticsServer", "ServerHandle"]
@@ -190,10 +193,15 @@ class _Pending:
 
 
 def _node_table(node) -> Table | None:
-    t = getattr(node, "table", None)
-    if isinstance(t, GroupedView):
-        return t.table
-    return t if isinstance(t, Table) else None
+    """The statement's ADMISSION table — what its window keys on.  A
+    joined statement windows by its FACT table (the scan side; the small
+    dimension only shapes the group-id column), so fact appends drain it
+    like any single-table statement.  Dimension-mutation staleness is
+    handled one layer down: ``semantic_fingerprint`` refuses to cache
+    any multi-table statement, so a join can never be answered from the
+    result cache after only the dimension moved."""
+    tables = _node_tables(node)
+    return tables[0] if tables else None
 
 
 class _Window:
@@ -460,12 +468,13 @@ class AnalyticsServer:
                 for j, p in enumerate(to_plan)
                 if p.fp is not None and p.table is not None]
         n_scan_stmts = sum(
-            isinstance(p.node, (ScanAgg, GroupedScanAgg))
+            isinstance(p.node,
+                       (ScanAgg, GroupedScanAgg, JoinedGroupedScanAgg))
             for p in batch)
         try:
             pl = plan([p.node for p in to_plan])
             scan_passes = sum(1 for ps in pl.passes
-                              if ps.kind in ("scan", "grouped"))
+                              if ps.kind in ("scan", "grouped", "join"))
             # a view answer that had to RESCAN is not a scan saved —
             # the data movement happened, just inside the hit path
             scans_saved = max(

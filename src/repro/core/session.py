@@ -41,7 +41,8 @@ from __future__ import annotations
 from typing import Any, Callable
 
 from .plan import (
-    GroupedScanAgg, IterativeFit, ScanAgg, StreamAgg, plan,
+    GroupedScanAgg, IterativeFit, JoinedGroupedScanAgg, ScanAgg,
+    StreamAgg, plan,
 )
 from .table import Table
 
@@ -154,6 +155,22 @@ class Session:
                            columns=columns, mask=mask,
                            block_size=block_size, method=method, mesh=mesh,
                            row_axes=row_axes, jit=jit, label=label),
+            post=post)
+
+    def joined_grouped_scan(self, agg, join, num_groups=None, *,
+                            columns=None, mask=None, block_size=None,
+                            method: str = "auto", mesh=None, row_axes=None,
+                            jit: bool = True, label=None, post=None
+                            ) -> Handle:
+        """``SELECT dim.attr, agg(...) FROM fact JOIN dim GROUP BY
+        dim.attr`` as one statement; ``join`` is a
+        :class:`~repro.core.join.Join`.  Statements over the same star
+        triple fuse into ONE pass sharing the sort-merge resolution."""
+        return self.statement(
+            JoinedGroupedScanAgg(agg, join, num_groups, columns=columns,
+                                 mask=mask, block_size=block_size,
+                                 method=method, mesh=mesh,
+                                 row_axes=row_axes, jit=jit, label=label),
             post=post)
 
     def fit(self, task, table=None, *, label=None, post=None,

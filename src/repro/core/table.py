@@ -53,6 +53,13 @@ class Table:
     # built at, so every lookup observes staleness (see group_by).
     _gb_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # sort memo: key_col -> (version, (sorted_keys, perm)).  One level
+    # below the group_by memo: the raw stable argsort of a column, shared
+    # by GROUP BY partitioning AND sort-merge join key resolution
+    # (core/join.py) — one argsort per (table, key), whoever asks first.
+    # Same host-side / version-stamp discipline as _gb_cache.
+    _sort_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
     # Versioning (the IVM contract): ``_version`` bumps on EVERY mutation
     # (append or invalidate); ``_epoch`` bumps only on non-append
     # mutations (invalidate).  A retained fold state pinned at
@@ -307,6 +314,7 @@ class Table:
         fresh instances.  Use :meth:`append` for append-only growth — it
         keeps the epoch so incremental refresh stays possible."""
         self._gb_cache.clear()
+        self._sort_cache.clear()
         self._version += 1
         self._epoch += 1
         self._notify_mutation()
@@ -333,15 +341,40 @@ class Table:
         for hook in list(self._mutation_hooks):
             hook(self)
 
+    def sort_permutation(self, key_col: str
+                         ) -> tuple[jax.Array, jax.Array]:
+        """Memoized stable argsort of one column: ``(sorted_keys, perm)``
+        with ``sorted_keys == self[key_col][perm]``.
+
+        This is THE partitioning sort of the engine — hoisted out of
+        :meth:`group_by` so GROUP BY partitioning and sort-merge join key
+        resolution (:mod:`repro.core.join`) share one argsort per
+        ``(table, key)``: a dimension table grouped by its key and joined
+        on the same key pays the sort once, whichever path asks first.
+        Memoized per ``key_col`` with the same version-stamp staleness
+        contract as the :meth:`group_by` memo; a miss records ONE
+        ``kind="sort"`` trace event tagged ``table=id(self)`` (the
+        per-table rollup in :meth:`Trace.summary` counts these), a hit
+        records nothing.
+        """
+        hit = self._sort_cache.get(key_col)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        from .trace import record
+        record("sort", key_col=key_col, n_rows=self.n_rows,
+               table=id(self))
+        keys = self.columns[key_col]
+        perm = jnp.argsort(keys, stable=True)
+        out = (keys[perm], perm)
+        self._sort_cache[key_col] = (self._version, out)
+        return out
+
     def _group_by_uncached(self, key_col: str, num_groups: int | None
                            ) -> "GroupedView":
-        from .trace import record
-        record("sort", key_col=key_col, n_rows=self.n_rows)
-        gids = self.columns[key_col].astype(jnp.int32)
+        sorted_keys, perm = self.sort_permutation(key_col)
+        sorted_gids = sorted_keys.astype(jnp.int32)
         if num_groups is None:
-            num_groups = int(jax.device_get(jnp.max(gids))) + 1
-        perm = jnp.argsort(gids, stable=True)
-        sorted_gids = gids[perm]
+            num_groups = int(jax.device_get(jnp.max(sorted_gids))) + 1
         offsets = jnp.searchsorted(
             sorted_gids, jnp.arange(num_groups + 1, dtype=jnp.int32)
         ).astype(jnp.int32)

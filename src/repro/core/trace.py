@@ -36,6 +36,21 @@ refresh kind (``"none"``/``"noop"``/``"delta"`` cost zero scans;
 ``"rescan"`` means the view re-read the table inside the hit path).
 :meth:`Trace.summary` rolls every kind up into counts, plus a
 per-table breakdown of the serving events under ``"by_table"``.
+
+The join layer adds two more kinds.  ``kind="join"`` — one event per
+sort-merge key resolution actually performed (:meth:`repro.core.join
+.Join.resolve`; memo hits are silent, like ``group_by``), so "N joined
+statements shared one resolution" is a trace count.  Every ``sort``
+event carries ``detail["table"]`` (the sorting table's id) and
+:meth:`Trace.summary` rolls sorts up per table under
+``"sorts_by_table"`` — the assertion surface for sort dedup across a
+star schema ("the dim key sort and the fact partition sort happened
+once EACH"), counted, never timed.  ``kind="cache_reject"`` — one
+event per statement the server-side result cache refused to fingerprint
+because it reads MORE THAN ONE table (a join): the cache keys on a
+single table's version, so caching a join result could serve stale
+state after only the dimension mutated; the loud event makes the
+refusal observable (see :func:`repro.core.plan.semantic_fingerprint`).
 """
 
 from __future__ import annotations
@@ -48,7 +63,8 @@ from typing import Any, Iterator
 @dataclasses.dataclass
 class Event:
     kind: str               # "scan" | "sort" | "fit" | "delta" | "kernel"
-    #                       | "admission" | "cache_hit"
+    #                       | "admission" | "cache_hit" | "join"
+    #                       | "cache_reject"
     engine: str | None      # "local" / "sharded" / "grouped-segment" / ...;
     # for kind="kernel" this is the RESOLVED implementation ("ref" /
     # "pallas"), with detail carrying the kernel name and requested impl
@@ -97,6 +113,20 @@ class Trace:
         return self._kind("admission")
 
     @property
+    def joins(self) -> list[Event]:
+        """Sort-merge join key resolutions actually performed
+        (``Join.resolve`` memo misses; hits are silent) — N joined
+        statements over one (fact, dim, key) triple record ONE."""
+        return self._kind("join")
+
+    @property
+    def cache_rejects(self) -> list[Event]:
+        """Statements the semantic fingerprint refused to identify for
+        the result cache because they read more than one table;
+        ``detail["tables"]`` lists the table ids involved."""
+        return self._kind("cache_reject")
+
+    @property
     def cache_hits(self) -> list[Event]:
         """Statements answered from the server's version-keyed result
         cache (``detail["source"] == "cache"``) or a registered
@@ -118,6 +148,16 @@ class Trace:
         out: dict[str, Any] = {}
         for e in self.events:
             out[e.kind] = out.get(e.kind, 0) + 1
+        sorts = self._kind("sort")
+        if sorts:
+            # per-table sort rollup: sort dedup across a star schema
+            # ("one argsort per (table, key)") is asserted from these
+            # counts, never from timing
+            by_sorts: dict[Any, int] = {}
+            for e in sorts:
+                t = e.detail.get("table")
+                by_sorts[t] = by_sorts.get(t, 0) + 1
+            out["sorts_by_table"] = by_sorts
         admissions = self._kind("admission")
         for field in ("scans_saved", "deduped"):
             total = sum(e.detail.get(field, 0) for e in admissions)

@@ -53,6 +53,16 @@ def distribute_rows(mesh: Mesh, row_axes, columns: dict) -> dict:
             for k, v in columns.items()}
 
 
+def replicate(mesh: Mesh, array):
+    """device_put one array fully replicated across ``mesh`` — the
+    broadcast side of a star-schema join (core/join.py): a dimension's
+    small sorted key/attr columns are copied to every device so the
+    row-sharded fact side can searchsorted/gather against them without
+    cross-device data movement per fact row.  The dual of
+    :func:`distribute_rows` (which row-shards)."""
+    return jax.device_put(array, NamedSharding(mesh, P()))
+
+
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),
     "fsdp": "data",

@@ -17,7 +17,9 @@ import jax.numpy as jnp
 
 from ..core.aggregates import Aggregate, MERGE_SUM
 from ..core.iterative import IterativeTask
-from ..core.plan import GroupedScanAgg, ScanAgg, execute
+from ..core.join import Join
+from ..core.plan import GroupedScanAgg, JoinedGroupedScanAgg, ScanAgg, \
+    execute
 from ..core.table import Table
 from ..kernels.registry import dispatch, resolve_impl
 
@@ -163,3 +165,26 @@ def linregr_grouped(table: Table, key_col: str,
         LinregrAggregate(use_kernel), table, key_col, num_groups,
         columns={"x": x_col, "y": y_col}, block_size=block_size,
         mesh=mesh, label="linregr_grouped"))
+
+
+def linregr_joined(fact: Table, dim: Table, *, fact_key: str,
+                   dim_key: str, attr_col: str,
+                   on_missing: str = "error",
+                   num_groups: int | None = None, x_col: str = "x",
+                   y_col: str = "y", block_size: int | None = None,
+                   use_kernel: bool | str = False, mesh=None
+                   ) -> LinregrResult:
+    """``SELECT dim.attr, (linregr(y, x)).* FROM fact JOIN dim ON
+    fact.fk = dim.key GROUP BY dim.attr`` — one model per dimension
+    attribute, as ONE joined-grouped statement.  The join resolves
+    device-side through the :class:`~repro.core.join.Join` node (sort-
+    merge against the memoized dimension key sort; the dimension's
+    columns are never gathered onto fact rows) and the scan runs on the
+    unchanged grouped core; batched with other statements over the same
+    star triple it fuses into one pass."""
+    return execute(JoinedGroupedScanAgg(
+        LinregrAggregate(use_kernel),
+        Join(fact, dim, fact_key, dim_key, attr_col,
+             on_missing=on_missing),
+        num_groups, columns={"x": x_col, "y": y_col},
+        block_size=block_size, mesh=mesh, label="linregr_joined"))

@@ -11,6 +11,9 @@ Generators cover the shapes the engine contract cares about:
 * table sizes / feature dims (ragged block tails included),
 * group layouts — uniform, zipf-skewed, empty groups, singleton groups,
   non-contiguous (round-robin) ids, and everything-in-one-group,
+* star-schema join layouts — clean, dangling foreign keys, skewed
+  fan-out, empty dimension, duplicate dimension keys (invalid input the
+  join must reject), duplicate attribute values (collapsed by GROUP BY),
 * dyadic-exact feature draws (small multiples of ``1/denom``), whose f32
   sums and pairwise products are exact so fold ORDER cannot change any
   aggregate state — the input class that turns allclose engine-parity
@@ -21,10 +24,14 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["Draw", "cases", "group_layout", "GROUP_PATTERNS"]
+__all__ = ["Draw", "cases", "group_layout", "GROUP_PATTERNS",
+           "join_layout", "JOIN_PATTERNS"]
 
 GROUP_PATTERNS = ("uniform", "skewed", "empty", "singleton",
                   "non_contiguous", "one_group")
+
+JOIN_PATTERNS = ("clean", "dangling", "skewed", "empty_dim", "dup_keys",
+                 "dup_attr")
 
 
 class Draw:
@@ -115,3 +122,47 @@ def group_layout(draw: Draw, n: int, num_groups: int,
     else:
         raise ValueError(f"unknown group pattern {pattern!r}")
     return gids.astype(np.int32), pattern
+
+
+def join_layout(draw: Draw, n_fact: int, n_dim: int, num_groups: int,
+                pattern: str | None = None):
+    """A star-schema equi-join case: ``(fk, dim_keys, dim_attr, pattern)``
+    — fact foreign keys, dimension primary keys (non-contiguous, shuffled
+    so the join cannot cheat by treating keys as row indices), and the
+    dimension attribute being grouped by.
+
+    Patterns: ``clean`` every FK matches; ``dangling`` some FKs hit no
+    dimension key (exercises ``on_missing=``); ``skewed`` zipf-ish
+    fan-out (a few dim rows own most fact rows); ``empty_dim`` a zero-row
+    dimension; ``dup_keys`` duplicate dimension KEYS — invalid input the
+    join must reject loudly; ``dup_attr`` distinct keys sharing attribute
+    values (GROUP BY must collapse them into one group).
+    """
+    G = max(1, int(num_groups))
+    if pattern is None:
+        pattern = draw.sample(JOIN_PATTERNS)
+    if pattern == "empty_dim":
+        dim_keys = np.zeros(0, np.int32)
+        dim_attr = np.zeros(0, np.int32)
+        fk = draw.ints((n_fact,), 0, 1 << 20)
+        return fk, dim_keys, dim_attr, pattern
+    # sparse, shuffled key space: keys are NOT row positions or group ids
+    dim_keys = draw.permutation(n_dim * 7)[:n_dim].astype(np.int32) + 11
+    dim_attr = draw.ints((n_dim,), 0, G - 1)
+    if pattern == "dup_attr":
+        dim_attr = (np.arange(n_dim) % G).astype(np.int32)  # G << n_dim
+    if pattern == "skewed":
+        w = 1.0 / (np.arange(n_dim) + 1.0)
+        rows = draw.rng.choice(n_dim, size=n_fact, p=w / w.sum())
+    else:
+        rows = draw.rng.integers(0, n_dim, size=n_fact)
+    fk = dim_keys[rows].astype(np.int32)
+    if pattern == "dangling":
+        miss = draw.bools((n_fact,), p=0.2)
+        if not miss.any():
+            miss[draw.integers(0, n_fact - 1)] = True
+        fk = np.where(miss, np.int32(-5), fk).astype(np.int32)
+    if pattern == "dup_keys":
+        dim_keys = dim_keys.copy()
+        dim_keys[n_dim // 2] = dim_keys[0]  # invalid on purpose
+    return fk, dim_keys, dim_attr, pattern

@@ -33,7 +33,7 @@ from repro.methods.linregr import LinregrAggregate
 from repro.methods.naive_bayes import NaiveBayesAggregate
 from repro.methods.sketches import CountMinAggregate, FMAggregate
 
-from strategies import Draw, group_layout
+from strategies import Draw, group_layout, join_layout
 
 N, G = 160, 4
 STREAM_BS = 48
@@ -229,6 +229,41 @@ def test_fit_grouped_kernel_parity(impl, mesh1):
                               max_iters=1, tol=None, **kw)
         _assert_leaves(got.result.coef, base.result.coef, True,
                        f"fit_grouped kernel {impl} {kw}")
+
+
+@pytest.mark.parametrize("pattern", ("clean", "skewed", "dup_attr"))
+@pytest.mark.parametrize("name", ("linregr", "countmin"))
+def test_joined_grouped_parity(name, pattern, mesh1):
+    """The joined-grouped row of the matrix: ``fact JOIN dim GROUP BY
+    dim.attr`` through the device-side sort-merge join must equal a
+    materialize-then-group oracle (numpy key lookup, same grouped
+    engine) BIT-identically — locally and on the sharded grouped
+    engine."""
+    from repro.core import JoinedGroupedScanAgg, execute
+    from repro.core.join import Join
+
+    build, make_agg, _ = CASES[name]
+    draw = Draw(zlib.crc32(f"join/{name}/{pattern}".encode()))
+    fk, keys, attr, _ = join_layout(draw, N, 3 * G, G, pattern)
+    cols = {k: jnp.asarray(v) for k, v in build(draw).items()}
+    fact = Table.from_columns(dict(cols, fk=jnp.asarray(fk)))
+    dim = Table.from_columns({"key": jnp.asarray(keys),
+                              "region": jnp.asarray(attr)})
+    lookup = {int(k): int(a) for k, a in zip(keys, attr)}
+    gids = np.array([lookup[int(f)] for f in fk], np.int32)
+    groups = int(attr.max()) + 1
+
+    agg_cols = ({"x": "x", "y": "y"} if name == "linregr" else ("item",))
+    ref = run_grouped(_RawState(make_agg()),
+                      Table.from_columns(dict(cols, g=jnp.asarray(gids))),
+                      "g", groups, method="segment")
+    for kw in (dict(), dict(mesh=mesh1)):
+        f = fact.distribute(mesh1) if kw else fact
+        got = execute(JoinedGroupedScanAgg(
+            _RawState(make_agg()), Join(f, dim, "fk", "key", "region"),
+            groups, columns=agg_cols, method="segment", **kw))
+        _assert_leaves(got, ref, True,
+                       f"joined {name}/{pattern} {kw} {draw}")
 
 
 def test_final_results_ride_the_states(mesh1):

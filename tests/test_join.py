@@ -1,0 +1,303 @@
+"""Device-side sort-merge join: star-schema GROUP BY as one shared-sort
+segment scan.
+
+The contract under test (``core/join.py`` + the ``JoinedGroupedScanAgg``
+plan node):
+
+* **Resolution correctness** — ``Join.resolve()`` maps every fact
+  foreign key to its dimension row's attribute via searchsorted against
+  the memoized dimension key sort; the gid column is bit-identical to a
+  numpy dict-lookup oracle, over every generated join layout
+  (``tests/strategies.py``: clean / dangling / skewed fan-out /
+  duplicate attributes).
+* **Never materialized** — the joined table carries exactly ONE new
+  column (the int32 gid); dimension payloads are never gathered onto
+  fact rows.
+* **Loud edges** — duplicate dimension keys raise (an equi-join against
+  a non-key column is a silent-wrong-answer bug, not a feature);
+  ``on_missing="error"`` raises on dangling keys with a count;
+  ``"drop"`` excludes exactly the dangling rows (gid ``-1`` falls
+  outside every segment by the grouped core's contract); an empty
+  dimension errors unless dropping.
+* **Shared sort + one pass** — a batch of joined statements over the
+  same star triple fuses into ONE physical pass whose explain shows one
+  shared sort; re-running hits both the resolution memo and the
+  ``group_by`` memo: zero sorts, zero joins.  Mutating either side
+  (fact append, dim invalidate) forces re-resolution.
+* **Caching soundness** — ``semantic_fingerprint`` returns ``None`` for
+  any multi-table statement with a loud ``cache_reject`` trace event,
+  so the server result cache (keyed on the FACT table's version only)
+  can never serve a stale join after only the dimension mutated.
+* **Sharded parity** — dimension sort products replicate; fact blocks
+  stay row-sharded; results bit-identical to the local path.
+
+Everything asserts trace counts and bitwise equality — never timing.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    AnalyticsServer, Join, JoinedGroupedScanAgg, Session, Table, execute,
+    explain, run_grouped, trace_execution,
+)
+from repro.core.join import JOIN_GID_COL
+from repro.core.plan import node_tables, semantic_fingerprint
+from repro.methods.linregr import LinregrAggregate, linregr_joined
+from repro.methods.sketches import CountMinAggregate
+
+from strategies import Draw, cases, join_layout
+
+N_FACT, N_DIM, G = 192, 12, 4
+
+
+def _star(draw: Draw, pattern: str):
+    """(fact, dim, fk_np, dim_keys, dim_attr) for one join layout."""
+    fk, keys, attr, _ = join_layout(draw, N_FACT, N_DIM, G, pattern)
+    fact = Table.from_columns({"x": draw.dyadic((N_FACT, 3)),
+                               "y": draw.dyadic((N_FACT,)), "fk": fk})
+    dim = Table.from_columns({"key": keys, "region": attr})
+    return fact, dim, fk, keys, attr
+
+
+def _oracle_gids(fk, keys, attr):
+    m = {int(k): int(a) for k, a in zip(keys, attr)}
+    return np.array([m.get(int(f), -1) for f in fk], np.int32)
+
+
+def _join_node(fact, dim, agg=None, **kw):
+    return JoinedGroupedScanAgg(
+        agg or LinregrAggregate(), Join(fact, dim, "fk", "key", "region",
+                                        on_missing=kw.pop("on_missing",
+                                                          "error")),
+        columns={"x": "x", "y": "y"}, **kw)
+
+
+def _materialized_oracle(fact, gids_np, groups):
+    tbl = Table.from_columns({"x": fact["x"], "y": fact["y"],
+                              "g": jnp.asarray(gids_np)})
+    return run_grouped(LinregrAggregate(), tbl, "g", groups)
+
+
+# -- resolution correctness ---------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ("clean", "skewed", "dup_attr"))
+def test_resolution_matches_numpy_oracle(pattern):
+    for draw in cases(4, base_seed=11):
+        fact, dim, fk, keys, attr = _star(draw, pattern)
+        res = Join(fact, dim, "fk", "key", "region").resolve()
+        want = _oracle_gids(fk, keys, attr)
+        np.testing.assert_array_equal(
+            np.asarray(res.table[JOIN_GID_COL]), want,
+            err_msg=f"{pattern} {draw}")
+        assert res.dangling == 0
+        assert res.num_groups == int(attr.max()) + 1
+        # never materialized: exactly one new column, no dim payloads
+        assert set(res.table.columns) == set(fact.columns) | {JOIN_GID_COL}
+
+
+@pytest.mark.parametrize("pattern", ("clean", "skewed", "dup_attr"))
+def test_joined_grouped_bit_identical_to_materialized(pattern):
+    for draw in cases(3, base_seed=23):
+        fact, dim, fk, keys, attr = _star(draw, pattern)
+        got = execute(_join_node(fact, dim))
+        want = _materialized_oracle(fact, _oracle_gids(fk, keys, attr),
+                                    int(attr.max()) + 1)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{pattern} {draw}")
+
+
+# -- loud edges ---------------------------------------------------------------
+
+def test_dangling_error_raises_with_count():
+    draw = Draw(41)
+    fact, dim, fk, keys, attr = _star(draw, "dangling")
+    n_bad = int((_oracle_gids(fk, keys, attr) == -1).sum())
+    with pytest.raises(ValueError, match=f"{n_bad} of {N_FACT}"):
+        execute(_join_node(fact, dim))
+
+
+def test_dangling_drop_excludes_exactly_the_dangling_rows():
+    for draw in cases(3, base_seed=43):
+        fact, dim, fk, keys, attr = _star(draw, "dangling")
+        got = execute(_join_node(fact, dim, on_missing="drop"))
+        want = _materialized_oracle(fact, _oracle_gids(fk, keys, attr),
+                                    int(attr.max()) + 1)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{draw}")
+
+
+def test_duplicate_dim_keys_rejected_loudly():
+    draw = Draw(47)
+    fact, dim, *_ = _star(draw, "dup_keys")
+    with pytest.raises(ValueError, match="duplicate keys"):
+        Join(fact, dim, "fk", "key", "region").resolve()
+
+
+def test_empty_dim():
+    draw = Draw(53)
+    fact, dim, *_ = _star(draw, "empty_dim")
+    with pytest.raises(ValueError, match="empty dimension"):
+        Join(fact, dim, "fk", "key", "region").resolve()
+    res = Join(fact, dim, "fk", "key", "region",
+               on_missing="drop").resolve()
+    assert res.num_groups == 0 and res.dangling == N_FACT
+
+
+def test_bad_spec_rejected_eagerly():
+    draw = Draw(59)
+    fact, dim, *_ = _star(draw, "clean")
+    with pytest.raises(ValueError, match="on_missing"):
+        Join(fact, dim, "fk", "key", "region", on_missing="ignore")
+    with pytest.raises(KeyError):
+        Join(fact, dim, "nope", "key", "region")
+    with pytest.raises(KeyError):
+        Join(fact, dim, "fk", "key", "nope")
+
+
+# -- fusion, memo sharing, explain --------------------------------------------
+
+def test_joined_batch_one_pass_one_shared_sort():
+    draw = Draw(61)
+    fact, dim, fk, keys, attr = _star(draw, "clean")
+    sess = Session()
+    h_lr = sess.joined_grouped_scan(
+        LinregrAggregate(), Join(fact, dim, "fk", "key", "region"),
+        columns={"x": "x", "y": "y"})
+    h_cm = sess.joined_grouped_scan(
+        CountMinAggregate(4, 64, item_col="fk"),
+        Join(fact, dim, "fk", "key", "region"), columns=("fk",))
+    text = sess.explain()
+    assert "1 pass, 1 sort" in text
+    assert "JOIN" in text and "on fk=key" in text
+    assert "join-grouped-scan" in text
+    assert "sort-share" in text and "gather-materialize" in text
+    with trace_execution() as t:
+        sess.run()
+    assert len(t.scans) == 1, "compatible joined statements must fuse"
+    assert len(t.joins) == 1, "one key resolution for the whole batch"
+    # 2 sorts total: the dim key sort + the joined table's partition
+    # sort — each paid ONCE for the batch, not once per statement
+    assert len(t.sorts) == 2
+    groups = int(attr.max()) + 1
+    want = _materialized_oracle(fact, _oracle_gids(fk, keys, attr), groups)
+    for g, w in zip(jax.tree.leaves(h_lr.result()), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert h_cm.result().shape[0] == groups
+
+    # re-run: resolution memo + group_by memo both hit across plans
+    with trace_execution() as t:
+        execute(_join_node(fact, dim))
+    assert len(t.sorts) == 0 and len(t.joins) == 0
+
+    # sorts_by_table rollup: the dim sort is attributed to the dim table
+    with trace_execution() as t:
+        dim.invalidate()
+        execute(_join_node(fact, dim))
+    by = t.summary()["sorts_by_table"]
+    assert by.get(id(dim)) == 1
+
+
+def test_mutation_forces_reresolution():
+    draw = Draw(67)
+    fact, dim, fk, keys, attr = _star(draw, "clean")
+    execute(_join_node(fact, dim))
+    # dim invalidate: the memoized resolution is version-stale
+    dim.invalidate()
+    with trace_execution() as t:
+        execute(_join_node(fact, dim))
+    assert len(t.joins) == 1 and len(t.sorts) == 2
+    # fact append: new rows need fresh gids
+    m = {int(k): int(a) for k, a in zip(keys, attr)}
+    extra = Draw(68)
+    fk2 = keys[extra.rng.integers(0, N_DIM, 64)].astype(np.int32)
+    fact.append({"x": extra.dyadic((64, 3)), "y": extra.dyadic((64,)),
+                 "fk": fk2})
+    with trace_execution() as t:
+        got = execute(_join_node(fact, dim))
+    assert len(t.joins) == 1
+    all_fk = np.asarray(fact["fk"])
+    want = _materialized_oracle(
+        fact, np.array([m[int(f)] for f in all_fk], np.int32),
+        int(attr.max()) + 1)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_method_wrapper_and_explain_solo():
+    draw = Draw(71)
+    fact, dim, fk, keys, attr = _star(draw, "clean")
+    got = linregr_joined(fact, dim, fact_key="fk", dim_key="key",
+                         attr_col="region")
+    want = _materialized_oracle(fact, _oracle_gids(fk, keys, attr),
+                                int(attr.max()) + 1)
+    np.testing.assert_array_equal(np.asarray(got.coef),
+                                  np.asarray(want.coef))
+    text = explain(_join_node(fact, dim))
+    assert "JOIN" in text and "groups=" in text
+
+
+# -- caching soundness --------------------------------------------------------
+
+def test_semantic_fingerprint_rejects_multi_table():
+    draw = Draw(73)
+    fact, dim, *_ = _star(draw, "clean")
+    node = _join_node(fact, dim)
+    assert node_tables(node) == (fact, dim)
+    with trace_execution() as t:
+        assert semantic_fingerprint(node) is None
+    (ev,) = t.cache_rejects
+    assert ev.detail["reason"] == "multi-table"
+    assert ev.detail["tables"] == (id(fact), id(dim))
+
+
+def test_server_never_serves_stale_join_after_dim_mutation():
+    """Regression for the PR-8 result cache: the cache key carries only
+    the FACT table's version, so a joined statement must never be
+    cached — otherwise mutating only the dimension would leave the key
+    intact and replay the pre-mutation answer."""
+    draw = Draw(79)
+    fact, dim, fk, keys, attr = _star(draw, "clean")
+    srv = AnalyticsServer(window_size=1)
+    try:
+        sess = Session(server=srv)
+        h1 = sess.joined_grouped_scan(
+            LinregrAggregate(), Join(fact, dim, "fk", "key", "region"),
+            columns={"x": "x", "y": "y"})
+        h1.result()
+        # mutate ONLY the dimension: remap every attribute
+        new_attr = ((attr + 1) % G).astype(np.int32)
+        dim.columns["region"] = jnp.asarray(new_attr)
+        dim.invalidate()
+        with trace_execution() as t:
+            h2 = sess.joined_grouped_scan(
+                LinregrAggregate(), Join(fact, dim, "fk", "key", "region"),
+                columns={"x": "x", "y": "y"})
+            got = h2.result()
+        assert len(t.cache_hits) == 0 and len(t.scans) == 1
+        assert srv.stats["cache_hits"] == 0
+        want = _materialized_oracle(fact, _oracle_gids(fk, keys, new_attr),
+                                    int(attr.max()) + 1)
+        np.testing.assert_array_equal(np.asarray(got.coef),
+                                      np.asarray(want.coef))
+    finally:
+        srv.close()
+
+
+# -- sharded path -------------------------------------------------------------
+
+def test_sharded_join_bit_identical_to_local(mesh1):
+    for draw in cases(3, base_seed=83):
+        fact, dim, fk, keys, attr = _star(draw, "skewed")
+        base = execute(_join_node(fact, dim))
+        fact_d = fact.distribute(mesh1)
+        with trace_execution() as t:
+            got = execute(_join_node(fact_d, dim, mesh=mesh1))
+        assert len(t.joins) == 1
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(base)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{draw}")

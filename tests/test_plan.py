@@ -232,6 +232,31 @@ def test_quantiles_grouped_single_sort(table):
     assert out.shape == (GROUPS, 3)
 
 
+def test_sort_permutation_memo_spans_grouped_entry_points(table):
+    """The hoisted ``Table.sort_permutation`` memo is shared by EVERY
+    consumer of a table's partitioning sort: ``fit_grouped`` and a
+    planned grouped scan over the same (table, key) pay ONE argsort;
+    ``quantiles_grouped``'s two internal passes pay one more on its
+    projection table; and ``Trace.summary()`` attributes each to its
+    table in the ``sorts_by_table`` rollup."""
+    from repro.core import fit_grouped
+    from repro.methods.linregr import LinregrTask
+    from repro.methods.quantiles import quantiles_grouped
+    tbl = Table.from_columns({k: v for k, v in table.columns.items()})
+    tbl = tbl.with_column("v", tbl["y"])
+    with trace_execution() as t:
+        quantiles_grouped(tbl, "g", [0.5], bins=64)
+        fit_grouped(LinregrTask(), tbl, "g", GROUPS, max_iters=1, tol=None)
+        execute(GroupedScanAgg(LinregrAggregate(), tbl, "g",
+                               columns=("x", "y")))
+    assert len(t.sorts) == 2, "one sort per (table, key), ever"
+    by = t.summary()["sorts_by_table"]
+    assert by[id(tbl)] == 1 and sorted(by.values()) == [1, 1]
+    perm_a = tbl.sort_permutation("g")
+    perm_b = tbl.sort_permutation("g")
+    assert perm_a is perm_b, "memo must return the identical product"
+
+
 # -- stream fusion ------------------------------------------------------------
 
 def test_stream_statements_fuse_over_shared_source(table):
